@@ -1,0 +1,51 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+
+def build_fl(num_clients=20, tau=2, lr=0.05, batch_size=16, seed=0,
+             noniid=True, n_data=2000, **flkw):
+    """Paper-style FL system: FCN classifier on synthetic mixture data."""
+    from repro.configs import get_config
+    from repro.data.synthetic import mixture_classification
+    from repro.fed import FLConfig, FLSystem, partition_iid, \
+        partition_label_skew
+    from repro.models.smallnets import apply_fcn, classifier_loss, init_fcn
+
+    cfg = get_config("paper-fcn")
+    params, _ = init_fcn(jax.random.PRNGKey(seed), cfg)
+    n_test = 500
+    x_all, y_all = mixture_classification(n_data + n_test, 10, seed=seed)
+    x, y = x_all[:n_data], y_all[:n_data]
+    xe, ye = x_all[n_data:], y_all[n_data:]        # held-out, same mixture
+    parts = (partition_label_skew(y, num_clients, 3, seed=seed) if noniid
+             else partition_iid(len(y), num_clients, seed=seed))
+    data = [{"x": x[p], "y": y[p]} for p in parts]
+    loss_fn = lambda p, b: classifier_loss(apply_fcn, p, cfg, b["x"], b["y"])
+    fl = FLSystem(loss_fn, params, data,
+                  FLConfig(num_clients=num_clients, tau=tau, lr=lr,
+                           batch_size=batch_size, seed=seed, **flkw))
+
+    def evaluate(params):
+        _, m = loss_fn(params, {"x": jax.numpy.asarray(xe),
+                                "y": jax.numpy.asarray(ye)})
+        return {"test_acc": float(m["acc"])}
+
+    return fl, evaluate
+
+
+def timed_rounds(fl, rounds: int, seed=1):
+    rng = np.random.RandomState(seed)
+    t0 = time.time()
+    for _ in range(rounds):
+        fl.run_round(rng)
+    return (time.time() - t0) / rounds * 1e6  # us per round
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.0f},{derived}")

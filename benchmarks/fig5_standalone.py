@@ -1,0 +1,27 @@
+"""Paper Fig. 5: LBGM standalone vs vanilla FL — accuracy vs floating-point
+parameters shared (non-iid, delta = 0.2)."""
+from __future__ import annotations
+
+from benchmarks.common import build_fl, emit, timed_rounds
+
+
+def run(rounds=40, delta=0.2):
+    fl_v, ev = build_fl(use_lbgm=False, noniid=True)
+    us_v = timed_rounds(fl_v, rounds)
+    acc_v = ev(fl_v.params)["test_acc"]
+
+    fl_l, ev = build_fl(use_lbgm=True, delta_threshold=delta, noniid=True)
+    us_l = timed_rounds(fl_l, rounds)
+    acc_l = ev(fl_l.params)["test_acc"]
+    savings = 1 - fl_l.total_uplink / fl_v.total_uplink
+
+    emit("fig5_vanilla_fl", us_v,
+         f"acc={acc_v:.3f} uplink_floats={fl_v.total_uplink:.3g}")
+    emit("fig5_lbgm", us_l,
+         f"acc={acc_l:.3f} uplink_floats={fl_l.total_uplink:.3g} "
+         f"savings={savings:.1%} acc_drop={acc_v - acc_l:+.3f}")
+    return {"acc_vanilla": acc_v, "acc_lbgm": acc_l, "savings": savings}
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,26 @@
+"""Paper Fig. 6: effect of delta_threshold — larger thresholds buy more
+communication savings at some accuracy cost (takeaway 5)."""
+from __future__ import annotations
+
+from benchmarks.common import build_fl, emit, timed_rounds
+
+
+def run(rounds=40, deltas=(0.01, 0.05, 0.2, 0.4)):
+    results = {}
+    base, ev = build_fl(use_lbgm=False, noniid=True)
+    timed_rounds(base, rounds)
+    van_uplink = base.total_uplink
+    for d in deltas:
+        fl, ev = build_fl(use_lbgm=True, delta_threshold=d, noniid=True)
+        us = timed_rounds(fl, rounds)
+        acc = ev(fl.params)["test_acc"]
+        sav = 1 - fl.total_uplink / van_uplink
+        emit(f"fig6_delta_{d}", us,
+             f"acc={acc:.3f} savings={sav:.1%} "
+             f"frac_scalar={fl.history[-1]['frac_scalar']:.2f}")
+        results[d] = {"acc": acc, "savings": sav}
+    return results
+
+
+if __name__ == "__main__":
+    print(run())

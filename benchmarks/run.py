@@ -1,0 +1,46 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows. Figures covered: 1 (PCA), 5 (standalone), 6 (threshold),
+# 7 (plug-and-play), 8 (SignSGD distributed), + kernel micro-bench.
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig1,fig5,fig6,fig7,fig8,kernels")
+    ap.add_argument("--rounds", type=int, default=30)
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    def on(name):
+        return want is None or name in want
+
+    print("name,us_per_call,derived")
+    if on("fig1"):
+        from benchmarks import fig1_pca
+        fig1_pca.run(epochs=25)
+    if on("fig5"):
+        from benchmarks import fig5_standalone
+        fig5_standalone.run(rounds=args.rounds)
+    if on("fig6"):
+        from benchmarks import fig6_threshold
+        fig6_threshold.run(rounds=args.rounds)
+    if on("fig7"):
+        from benchmarks import fig7_plugplay
+        fig7_plugplay.run(rounds=args.rounds)
+    if on("fig8"):
+        from benchmarks import fig8_signsgd
+        fig8_signsgd.run(rounds=args.rounds)
+    if on("kernels"):
+        from benchmarks import kernel_bench
+        kernel_bench.run()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,88 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb on the three selected (arch x shape) pairs.
+
+Picks (from the baseline roofline table):
+  1. qwen3-1.7b x train_4k        — most representative of the paper
+     (replicated DP, dense per-client LBGM, Algorithm 1 byte-for-byte);
+     collective-dominated.
+  2. llama4-maverick x train_4k   — most collective-bound pair in the
+     whole table (FSDP parameter re-gathers x clients).
+  3. rwkv6-3b x train_4k          — worst collective:compute ratio among
+     replicated archs (attention-free SSM; biggest all-gather waste).
+
+Each experiment: hypothesis -> config/sharding change -> re-lower ->
+re-measure the roofline terms. Results land in experiments/hillclimb/.
+"""
+import dataclasses     # noqa: E402
+import json            # noqa: E402
+
+import jax.numpy as jnp                      # noqa: E402
+from repro.configs import get_config         # noqa: E402
+from repro.launch.dryrun import lower_pair   # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+OUT = "experiments/hillclimb"
+
+
+def run(tag, arch, shape, mesh, **kw):
+    print(f"--- {tag}", flush=True)
+    row = lower_pair(arch, shape, mesh, "pod16x16", **kw)
+    row["experiment"] = tag
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, f"{tag}.json"), "w") as f:
+        json.dump(row, f, indent=1, default=str)
+    if row["status"] == "ok":
+        print(f"    terms=({row['compute_s']:.4f}, {row['memory_s']:.4f}, "
+              f"{row['collective_s']:.4f})s dominant={row['dominant']} "
+              f"coll_GiB={row['coll_bytes_per_dev']/2**30:.2f}", flush=True)
+    else:
+        print("    ", row.get("error", row["status"])[-500:], flush=True)
+    return row
+
+
+def main():
+    mesh = make_production_mesh()
+    unroll = {}  # scan mode: the attacked collectives are outside the layer scan
+
+    # ---------------- pick 1: qwen3-1.7b train_4k (paper-representative)
+    a, s = "qwen3-1.7b", "train_4k"
+    run("qwen3_base", a, s, mesh, **unroll)                       # baseline
+    # H1: the stacked per-client gradient mean over the K-sharded axis is
+    # lowered as all-gather(K x M/16) instead of partial-sum+all-reduce;
+    # and the vocab-sharded embedding table is all-gathered per client.
+    # Change A: shard the embedding along d_model => token gathers local.
+    run("qwen3_embedshard", a, s, mesh, embed_shard="embed", **unroll)
+    # Change B: aggregate the reconstructed gradients in bf16 (halves the
+    # payload of whatever collective implements the client reduction).
+    run("qwen3_bf16agg", a, s, mesh, agg_dtype=jnp.bfloat16, **unroll)
+    # Change C: both.
+    run("qwen3_embed_bf16", a, s, mesh, embed_shard="embed",
+        agg_dtype=jnp.bfloat16, **unroll)
+
+    # ---------------- pick 2: llama4 train_4k (most collective-bound)
+    a = "llama4-maverick-400b-a17b"
+    base_cfg = get_config(a)
+    # baseline at true K=16 (scan body counts one client; x16 in analysis)
+    run("llama4_base_K16", a, s, mesh, clients_override=16)
+    # H2a: remat re-gathers FSDP weights in the backward => ~2x all-gather.
+    run("llama4_noremat_K16", a, s, mesh, clients_override=16,
+        cfg_override=dataclasses.replace(base_cfg, remat=False))
+    # H2b: fewer, larger clients: all-gather traffic scales with K.
+    run("llama4_K4", a, s, mesh, clients_override=4)
+    # H2c: combined.
+    run("llama4_noremat_K4", a, s, mesh, clients_override=4,
+        cfg_override=dataclasses.replace(base_cfg, remat=False))
+
+    # ---------------- pick 3: rwkv6-3b train_4k (worst coll ratio, SSM)
+    a = "rwkv6-3b"
+    run("rwkv6_base", a, s, mesh, **unroll)
+    run("rwkv6_embedshard", a, s, mesh, embed_shard="embed", **unroll)
+    run("rwkv6_bf16agg", a, s, mesh, agg_dtype=jnp.bfloat16, **unroll)
+    run("rwkv6_embed_bf16", a, s, mesh, embed_shard="embed",
+        agg_dtype=jnp.bfloat16, **unroll)
+
+
+if __name__ == "__main__":
+    main()

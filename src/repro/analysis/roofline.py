@@ -1,0 +1,169 @@
+"""Roofline analysis from the compiled dry-run artifact (no real hardware).
+
+Terms (per chip; the compiled SPMD module is the per-device program):
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+collective_bytes is NOT in cost_analysis(): we parse the optimized HLO and
+sum operand sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (brief-specified).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device ICI bytes per collective kind, from optimized HLO text.
+
+    Operand shapes are not printed inline in optimized HLO, so we use the
+    RESULT shape R plus the replica-group size n with standard ring-collective
+    traffic factors:
+        all-reduce          2 R (n-1)/n     (reduce-scatter + all-gather)
+        all-gather          R (n-1)/n       (R = gathered result)
+        reduce-scatter      R (n-1)         (input = n R per device)
+        all-to-all          R (n-1)/n
+        collective-permute  R
+    """
+    out: Dict[str, float] = {k: 0.0 for k in COLLECTIVE_OPS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(
+            r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+            r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)(?:-start)?\(", stripped)
+        if not m:
+            continue
+        result, kind = m.group(1), m.group(2)
+        r_bytes = sum(_shape_bytes(d, s)
+                      for d, s in _SHAPE_RE.findall(result))
+        n = _group_size(stripped)
+        if n <= 1:
+            continue
+        if kind == "all-reduce":
+            traffic = 2.0 * r_bytes * (n - 1) / n
+        elif kind in ("all-gather", "all-to-all"):
+            traffic = r_bytes * (n - 1) / n
+        elif kind == "reduce-scatter":
+            traffic = float(r_bytes) * (n - 1)
+        else:  # collective-permute
+            traffic = float(r_bytes)
+        out[kind] += traffic
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in COLLECTIVE_OPS)
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops_global: float
+    compute_s: float = field(init=False)
+    memory_s: float = field(init=False)
+    collective_s: float = field(init=False)
+
+    def __post_init__(self):
+        self.compute_s = self.flops_per_device / PEAK_FLOPS
+        self.memory_s = self.bytes_per_device / HBM_BW
+        self.collective_s = self.collective_bytes_per_device / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_device * self.chips
+        return self.model_flops_global / total if total else 0.0
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops_global,
+            "hlo_flops_per_dev": self.flops_per_device,
+            "hlo_bytes_per_dev": self.bytes_per_device,
+            "coll_bytes_per_dev": self.collective_bytes_per_device,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def model_flops(cfg, shape_cfg, n_active_params: int) -> float:
+    """6 * N_active * D (training) or 2 * N_active * D (inference)."""
+    if shape_cfg.kind == "train":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 6.0 * n_active_params * tokens
+    if shape_cfg.kind == "prefill":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 2.0 * n_active_params * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active_params * shape_cfg.global_batch
+
+
+def build_report(arch: str, shape: str, mesh_name: str, chips: int,
+                 cost: Optional[dict], hlo_text: str,
+                 model_flops_global: float) -> RooflineReport:
+    cost = cost or {}
+    coll = collective_bytes(hlo_text)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=float(cost.get("flops", 0.0)),
+        bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes_per_device=float(coll["total"]),
+        model_flops_global=model_flops_global,
+    )

@@ -1,0 +1,66 @@
+"""Checkpointing: flat-dict pytrees <-> .npz (atomic, with metadata)."""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in sorted(tree.items()):
+            out.update(_flatten(v, f"{prefix}{k}{_SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}{_SEP}"))
+    else:
+        out[prefix.rstrip(_SEP[-1]).removesuffix(_SEP)] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    tree: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def fix(node):
+        if isinstance(node, dict) and node and all(
+                k.startswith("#") for k in node):
+            return [fix(node[f"#{i}"]) for i in range(len(node))]
+        if isinstance(node, dict):
+            return {k: fix(v) for k, v in node.items()}
+        return node
+    return fix(tree)
+
+
+def save_checkpoint(path: str, state, metadata: Optional[dict] = None):
+    flat = _flatten(jax.tree.map(np.asarray, state))
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    # suffix must end in .npz or np.savez silently writes to "<tmp>.npz"
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp.npz")
+    os.close(fd)
+    try:
+        np.savez(tmp, __metadata__=json.dumps(metadata or {}), **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def load_checkpoint(path: str) -> Tuple[Any, dict]:
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__metadata__"]))
+        flat = {k: z[k] for k in z.files if k != "__metadata__"}
+    return _unflatten(flat), meta

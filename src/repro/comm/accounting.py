@@ -1,0 +1,36 @@
+"""Logical communication accounting — the paper's reported metric
+("floating-point parameters shared per worker", Figs. 5-8).
+
+The physical ICI collective of the mesh simulation is analyzed separately by
+``repro.analysis.roofline``; this module tracks the FL uplink a real
+client<->server deployment would pay.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+@dataclass
+class CommLedger:
+    rounds: int = 0
+    uplink_floats: float = 0.0
+    vanilla_floats: float = 0.0
+    per_round: List[Dict[str, float]] = field(default_factory=list)
+
+    def record(self, uplink: float, vanilla: float):
+        self.rounds += 1
+        self.uplink_floats += uplink
+        self.vanilla_floats += vanilla
+        self.per_round.append({"uplink": uplink, "vanilla": vanilla})
+
+    @property
+    def savings(self) -> float:
+        if self.vanilla_floats == 0:
+            return 0.0
+        return 1.0 - self.uplink_floats / self.vanilla_floats
+
+    def summary(self) -> Dict[str, float]:
+        return {"rounds": self.rounds, "uplink_floats": self.uplink_floats,
+                "vanilla_floats": self.vanilla_floats,
+                "savings": self.savings}

@@ -1,0 +1,20 @@
+"""Gradient compression baselines the paper stacks LBGM on (P3/P4)."""
+from repro.compression import atomo, error_feedback, signsgd, topk  # noqa: F401
+
+
+def get_compressor(name: str, **kw):
+    """Returns fn: grads -> (dense compressed grads, uplink float cost)."""
+    if name == "none":
+        import jax.numpy as jnp
+        from repro.core.tree_math import tree_size
+        return lambda g: (g, jnp.asarray(float(tree_size(g)), jnp.float32))
+    if name == "topk":
+        k_frac = kw.get("k_frac", 0.1)
+        return lambda g: topk.compress(g, k_frac)
+    if name == "signsgd":
+        return signsgd.compress
+    if name == "atomo":
+        rank = kw.get("rank", 2)
+        method = kw.get("method", "svd")
+        return lambda g: atomo.compress(g, rank, method)
+    raise ValueError(name)

@@ -1,0 +1,52 @@
+"""ATOMO-style low-rank gradient factorization (Wang et al. 2018; paper P3).
+
+Each leaf is reshaped to 2D and approximated at rank r. Two backends:
+  * exact truncated SVD (small paper models, CPU-friendly)
+  * subspace/power iteration (PowerSGD-flavored, MXU-only; TPU-native
+    adaptation documented in DESIGN.md — ATOMO's exact SVD atoms are
+    host-unfriendly at production scale)
+Uplink cost: r * (m + n) floats per leaf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _to_2d(g: jax.Array):
+    if g.ndim == 0:
+        return g.reshape(1, 1)
+    if g.ndim == 1:
+        return g.reshape(1, -1)
+    return g.reshape(g.shape[0], -1)
+
+
+def lowrank_leaf(g: jax.Array, rank: int, method: str = "svd",
+                 iters: int = 2, key=None):
+    m2 = _to_2d(g).astype(jnp.float32)
+    m, n = m2.shape
+    r = min(rank, m, n)
+    if method == "svd":
+        u, s, vt = jnp.linalg.svd(m2, full_matrices=False)
+        approx = (u[:, :r] * s[:r]) @ vt[:r]
+    else:  # power iteration
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (n, r), jnp.float32)
+        for _ in range(iters):
+            p = m2 @ q                      # (m, r)
+            p, _ = jnp.linalg.qr(p)
+            q = m2.T @ p                    # (n, r)
+        approx = p @ q.T
+    cost = r * (m + n)
+    return approx.reshape(g.shape).astype(g.dtype), float(cost)
+
+
+def compress(grads, rank: int = 2, method: str = "svd", key=None):
+    out = {}
+    total = 0.0
+    for i, (name, g) in enumerate(grads.items()):
+        k = None if key is None else jax.random.fold_in(key, i)
+        out[name], cost = lowrank_leaf(g, rank, method, key=k)
+        total += cost
+    return out, jnp.asarray(total, jnp.float32)

@@ -1,0 +1,22 @@
+"""Error feedback (Karimireddy et al. 2019).
+
+The paper uses EF "as standard only if top-K sparsification is used":
+compress(g + e); e' = (g + e) - compressed.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.tree_math import tree_add, tree_sub, tree_zeros_like
+
+
+def init(params_like):
+    return tree_zeros_like(params_like)
+
+
+def apply(compress_fn, grads, residual):
+    """Returns (compressed, new_residual, uplink_cost)."""
+    target = tree_add(grads, residual)
+    compressed, cost = compress_fn(target)
+    new_residual = tree_sub(target, compressed)
+    return compressed, new_residual, cost

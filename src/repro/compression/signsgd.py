@@ -1,0 +1,20 @@
+"""SignSGD with per-leaf magnitude scale (Bernstein et al. 2018; paper P4).
+
+Uplink cost: 1 bit per element (1/32 float) + 1 scale float per leaf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(grads):
+    out = {}
+    bits = 0.0
+    for name, g in grads.items():
+        g32 = g.astype(jnp.float32)
+        scale = jnp.mean(jnp.abs(g32))
+        out[name] = (jnp.sign(g32) * scale).astype(g.dtype)
+        bits += g.size  # 1 bit / element
+    uplink_floats = jnp.asarray(bits / 32.0 + len(grads), jnp.float32)
+    return out, uplink_floats

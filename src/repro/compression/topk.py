@@ -1,0 +1,25 @@
+"""Top-K gradient sparsification (paper baseline for P3)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_leaf(g: jax.Array, k_frac: float):
+    """Keep the k largest-|.| entries of a leaf; returns dense sparsified leaf
+    and the logical uplink float count (values + indices @ ~0.5)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.size * k_frac))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    dense = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    return dense.reshape(g.shape).astype(g.dtype), 1.5 * k
+
+
+def compress(grads, k_frac: float):
+    """Pytree top-K. Returns (sparsified dense pytree, uplink float count)."""
+    total = 0.0
+    out = {}
+    for name, g in grads.items():
+        out[name], cost = topk_leaf(g, k_frac)
+        total += cost
+    return out, jnp.asarray(total, jnp.float32)

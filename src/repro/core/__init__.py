@@ -1,0 +1,3 @@
+from repro.core.lbgm import (LBGMStats, corollary1_threshold,  # noqa: F401
+                             init_topk_lbg, lbgm_client_step, lbgm_stats,
+                             lbgm_topk_client_step)

@@ -1,0 +1,139 @@
+"""Shard-local LBGM (beyond-paper §Perf optimization).
+
+The pjit formulation of topk-LBGM reconstructs a dense fp32 gradient from a
+flat block layout; GSPMD has to reshard that M-sized tensor back to the
+parameter layout, which costs ~4x params of all-gather per client on the
+FSDP archs (measured: 6.2 TiB/client for llama4 — EXPERIMENTS.md §Perf).
+
+Fix: run Algorithm 1's top-k variant under ``shard_map`` — every device
+performs the block-wise top-k, sparse gather and scatter on its OWN shard of
+the gradient; the only cross-device traffic is the psum of three partial
+scalars (<g,l>, ||g||^2, ||l||^2) per client. The LBG is stored in the same
+block layout, sharded exactly like the gradient. Semantics are identical to
+``lbgm_topk_client_step`` up to the block boundaries (blocks now align with
+shards, which is the better layout anyway).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.lbgm import (EPS, LBGMStats, _block_layout, leaf_topk,
+                             leaf_sparse_gather, leaf_scatter)
+
+
+def _spec_axes(spec: P) -> Tuple[str, ...]:
+    out = []
+    for e in spec:
+        if e is None:
+            continue
+        for a in (e if isinstance(e, tuple) else (e,)):
+            out.append(a)
+    return tuple(out)
+
+
+def _nshards(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def local_leaf_size(leaf_shape, spec: P, mesh: Mesh) -> int:
+    n = 1
+    for i, d in enumerate(leaf_shape):
+        e = spec[i] if i < len(spec) else None
+        div = 1
+        if e is not None:
+            for a in (e if isinstance(e, tuple) else (e,)):
+                div *= mesh.shape[a]
+        n *= d // div
+    return n
+
+
+def sharded_lbg_layout(params_like, gspecs: Dict[str, P], mesh: Mesh,
+                       k_frac: float):
+    """Returns (lbg SDS pytree, lbg NamedSharding pytree)."""
+    sds, sh = {}, {}
+    for name, leaf in params_like.items():
+        axes = _spec_axes(gspecs[name])
+        ns = _nshards(mesh, axes)
+        nb, _, kb = _block_layout(local_leaf_size(leaf.shape, gspecs[name],
+                                                  mesh), k_frac)
+        shape = (nb * ns, kb)
+        sds[name] = {"idx": jax.ShapeDtypeStruct(shape, jnp.int32),
+                     "val": jax.ShapeDtypeStruct(shape, jnp.float32)}
+        spec = P(axes if axes else None, None)
+        sh[name] = {"idx": NamedSharding(mesh, spec),
+                    "val": NamedSharding(mesh, spec)}
+    return sds, sh
+
+
+def init_sharded_lbg(params_like, gspecs, mesh, k_frac: float):
+    sds, _ = sharded_lbg_layout(params_like, gspecs, mesh, k_frac)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def make_sharded_topk_step(cfg, mesh: Mesh, gspecs: Dict[str, P],
+                           delta: float):
+    """Returns fn(grads, lbg) -> (g_tilde, new_lbg, LBGMStats), where grads
+    follow gspecs and lbg follows sharded_lbg_layout."""
+    k_frac = cfg.lbgm.k_frac
+    all_axes = tuple(mesh.axis_names)
+    total_dev = math.prod(mesh.shape[a] for a in all_axes)
+    lbg_specs = {name: {"idx": P(_spec_axes(gspecs[name]) or None, None),
+                        "val": P(_spec_axes(gspecs[name]) or None, None)}
+                 for name in gspecs}
+    # replication correction: leaves not sharded over some axes are summed
+    # that many extra times by the global psum
+    corr = {name: total_dev / _nshards(mesh, _spec_axes(gspecs[name]))
+            for name in gspecs}
+
+    def local_fn(grads, lbg):
+        gl = ll = gg = jnp.zeros((), jnp.float32)
+        for name, g in grads.items():
+            sl = lbg[name]
+            gv = leaf_sparse_gather(g, sl, k_frac)
+            c = 1.0 / corr[name]
+            gl += c * jnp.vdot(gv, sl["val"])
+            ll += c * jnp.vdot(sl["val"], sl["val"])
+            flat = g.reshape(-1).astype(jnp.float32)
+            gg += c * jnp.vdot(flat, flat)
+        gl = jax.lax.psum(gl, all_axes)
+        ll = jax.lax.psum(ll, all_axes)
+        gg = jax.lax.psum(gg, all_axes)
+        cos2 = (gl * gl) / jnp.maximum(gg * ll, EPS)
+        sin2 = jnp.where(ll > EPS, 1.0 - cos2, 1.0)
+        rho = gl / jnp.maximum(ll, EPS)
+        scalar = (sin2 <= delta) & (sin2 < 1.0)
+
+        g_tilde, new_lbg = {}, {}
+        total_k = 0
+        for name, g in grads.items():
+            sl = lbg[name]
+            total_k += sl["idx"].size
+            new = leaf_topk(g, k_frac)
+            send = {"idx": jnp.where(scalar, sl["idx"], new["idx"]),
+                    "val": jnp.where(scalar, rho * sl["val"], new["val"])}
+            g_tilde[name] = leaf_scatter(send, g.shape, g.size, k_frac,
+                                         dtype=g.dtype)
+            new_lbg[name] = {"idx": jnp.where(scalar, sl["idx"], new["idx"]),
+                             "val": jnp.where(scalar, sl["val"],
+                                              new["val"])}
+        stats = LBGMStats(sin2=sin2, rho=rho, sent_scalar=scalar,
+                          uplink_floats=jnp.where(scalar, 1.0,
+                                                  1.5 * total_k),
+                          grad_sq_norm=gg)
+        return g_tilde, new_lbg, stats
+
+    stat_spec = LBGMStats(*([P()] * 5))
+    return jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(gspecs, lbg_specs),
+        out_specs=(gspecs, lbg_specs, stat_spec),
+        check_vma=False)

@@ -1,0 +1,2 @@
+from repro.fed.partition import partition_iid, partition_label_skew  # noqa: F401
+from repro.fed.runtime import FLConfig, FLSystem  # noqa: F401

@@ -1,0 +1,38 @@
+"""Federated data partitioning: iid and label-skew non-iid (paper setup:
+"each worker has training data only from a subset of all labels",
+e.g. 3 of 10 classes)."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+
+def partition_iid(n: int, num_clients: int, seed: int = 0) -> List[np.ndarray]:
+    rng = np.random.RandomState(seed)
+    idx = rng.permutation(n)
+    return [np.sort(s) for s in np.array_split(idx, num_clients)]
+
+
+def partition_label_skew(labels: np.ndarray, num_clients: int,
+                         classes_per_client: int = 3,
+                         seed: int = 0) -> List[np.ndarray]:
+    """Each client sees only `classes_per_client` labels (non-iid S1)."""
+    rng = np.random.RandomState(seed)
+    num_classes = int(labels.max()) + 1
+    by_class = [np.where(labels == c)[0] for c in range(num_classes)]
+    for c in by_class:
+        rng.shuffle(c)
+    ptr = [0] * num_classes
+    out = []
+    for k in range(num_clients):
+        classes = rng.choice(num_classes, classes_per_client, replace=False)
+        take = []
+        for c in classes:
+            per = max(1, len(by_class[c]) * classes_per_client
+                      // (num_clients * classes_per_client))
+            lo = ptr[c] % max(len(by_class[c]) - per, 1)
+            take.append(by_class[c][lo:lo + per])
+            ptr[c] += per
+        out.append(np.sort(np.concatenate(take)))
+    return out

@@ -1,0 +1,61 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True unless a real TPU backend is present — the
+container validates kernel bodies on CPU; on TPU the same calls compile to
+Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lbgm_projection import lbgm_projection_pallas
+from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def lbgm_projection(g_tree, l_tree, interpret=None):
+    """Fused (<g,l>, ||g||^2, ||l||^2) over a pytree pair (one HBM pass per
+    leaf). Returns fp32 scalars."""
+    interpret = _default_interpret() if interpret is None else interpret
+    gl = gg = ll = jnp.zeros((), jnp.float32)
+    g_leaves = jax.tree.leaves(g_tree)
+    l_leaves = jax.tree.leaves(l_tree)
+    for g, l in zip(g_leaves, l_leaves):
+        a, b, c = lbgm_projection_pallas(g.reshape(-1), l.reshape(-1),
+                                         interpret=interpret)
+        gl, gg, ll = gl + a, gg + b, ll + c
+    return gl, gg, ll
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, interpret=None):
+    """GQA flash attention. q:(B,Tq,Hq,hd), k/v:(B,Tk,Hkv,hd)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    B, Tq, Hq, hd = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Tq, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(
+        B * Hq, Tk, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(
+        B * Hq, Tk, hd)
+    o = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                               interpret=interpret)
+    return o.reshape(B, Hq, Tq, hd).transpose(0, 2, 1, 3)
+
+
+def rwkv6_scan(r, k, v, logw, u, interpret=None):
+    """Chunked RWKV6. r/k/v/logw: (B,T,H,hd); u: (H,hd) -> fp32 (B,T,H,hd)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    B, T, H, hd = r.shape
+    flat = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    uf = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, hd)
+    o = rwkv6_scan_pallas(flat(r), flat(k), flat(v), flat(logw), uf,
+                          interpret=interpret)
+    return o.reshape(B, H, T, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lbgm_projection_ref(g: jax.Array, l: jax.Array):
+    g32 = g.astype(jnp.float32)
+    l32 = l.astype(jnp.float32)
+    return jnp.dot(g32, l32), jnp.dot(g32, g32), jnp.dot(l32, l32)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """Naive softmax attention. q:(BH,Tq,hd), k/v:(BH,Tk,hd)."""
+    Tq, Tk = q.shape[1], k.shape[1]
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Tq)[:, None]
+    kpos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, logw, u):
+    """Per-timestep recurrence — the ground-truth RWKV6 semantics.
+    r,k,v,logw: (BH, T, hd); u: (BH, hd). Returns fp32 (BH, T, hd).
+
+        out_t = r_t (S_{t-1} + u * k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    r, k, v, lw = (a.astype(jnp.float32) for a in (r, k, v, logw))
+    u = u.astype(jnp.float32)
+    BH, T, hd = r.shape
+
+    def step(S, xs):
+        rt, kt, vt, lwt = xs                     # (BH, hd)
+        kv = jnp.einsum("bd,be->bde", kt, vt)
+        out = jnp.einsum("bd,bde->be", rt, S + u[..., None] * kv)
+        S = jnp.exp(lwt)[..., None] * S + kv
+        return S, out
+
+    S0 = jnp.zeros((BH, hd, hd), jnp.float32)
+    xs = tuple(a.transpose(1, 0, 2) for a in (r, k, v, lw))
+    _, outs = jax.lax.scan(step, S0, xs)
+    return outs.transpose(1, 0, 2)

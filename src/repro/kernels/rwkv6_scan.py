@@ -1,0 +1,76 @@
+"""RWKV6 chunked recurrence — TPU Pallas.
+
+Grid (B*H, T/CHUNK); the chunk axis is innermost/sequential, carrying the
+(hd, hd) fp32 state in VMEM scratch across chunks. Each step loads one
+(CHUNK, hd) tile of r/k/v/logw, computes the intra-chunk masked interaction
+matrix on the MXU and the cross-chunk contribution from the carried state
+(same math as repro.models.rwkv6.chunked_wkv; oracle = per-step recurrence in
+ref.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 64
+
+
+def _rwkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *,
+                  c: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)           # (c, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = w_ref[0].astype(jnp.float32)          # log decay, <= 0
+    u = u_ref[0].astype(jnp.float32)           # (1, hd)
+
+    cum = jnp.cumsum(lw, axis=0)
+    cum_in = cum - lw
+    r_dec = r * jnp.exp(cum_in)
+    k_dec = k * jnp.exp(jnp.minimum(-cum, 60.0))  # overflow clamp (see models.rwkv6)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    a = jnp.dot(r_dec, k_dec.T, preferred_element_type=jnp.float32)
+    a = jnp.where(tri, a, 0.0)
+    diag = jnp.sum(r * u * k, axis=1)          # (c,)
+    out = jnp.dot(a, v, preferred_element_type=jnp.float32)
+    out += diag[:, None] * v
+    out += jnp.dot(r_dec, s_ref[...], preferred_element_type=jnp.float32)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+    total = cum[-1:, :]                        # (1, hd)
+    s_ref[...] = s_ref[...] * jnp.exp(total).T + jnp.dot(
+        (k * jnp.exp(total - cum)).T, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rwkv6_scan_pallas(r, k, v, logw, u, interpret: bool = True):
+    """r,k,v,logw: (BH, T, hd); u: (BH, hd). Returns fp32 (BH, T, hd)."""
+    BH, T, hd = r.shape
+    c = min(CHUNK, T)
+    assert T % c == 0
+    kernel = functools.partial(_rwkv6_kernel, c=c)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, T // c),
+        in_specs=[
+            pl.BlockSpec((1, c, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, c, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, c, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, c, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, hd), lambda b, i: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, hd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)

@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (arch x input-shape) on the
+production meshes; record memory/cost analyses + roofline terms.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.analysis import roofline as rl                   # noqa: E402
+from repro.configs import (ASSIGNED_ARCHS, INPUT_SHAPES,    # noqa: E402
+                           active_param_count, get_config)
+from repro.launch import specs as sp                        # noqa: E402
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+from repro.models.transformer import prefill_logits         # noqa: E402
+from repro.serve.decode import serve_step                   # noqa: E402
+from repro.train import sharding as shd                     # noqa: E402
+from repro.train import trainer as tr                       # noqa: E402
+
+
+def should_skip(cfg, shape_cfg):
+    if shape_cfg.name == "long_500k" and cfg.long_context == "skip":
+        return (f"{cfg.name}: long_500k skipped — enc-dec decoder context "
+                "architecturally capped (DESIGN.md §4)")
+    return None
+
+
+def lower_pair(arch: str, shape_name: str, mesh, mesh_name: str,
+               use_lbgm: bool = True, lr: float = 1e-2,
+               unroll: bool = False, cfg_override=None,
+               agg_dtype=None, embed_shard: str = "vocab",
+               clients_override=None, sharded_lbgm: bool = False):
+    import dataclasses
+    import jax.numpy as jnp
+    cfg = cfg_override or get_config(arch)
+    if unroll:
+        cfg = dataclasses.replace(cfg, unroll=True)
+    agg_dtype = agg_dtype or jnp.float32
+    shape_cfg = INPUT_SHAPES[shape_name]
+    skip = should_skip(cfg, shape_cfg)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": skip}
+
+    t0 = time.time()
+    if shape_cfg.kind == "train":
+        K = tr.effective_clients(cfg, mesh, shape_cfg.global_batch)
+        if unroll and cfg.dp_mode == "fsdp":
+            # the scan over clients is also cost-undercounted; one client
+            # with the full global batch has identical total model FLOPs
+            K = 1
+        if clients_override:
+            K = clients_override
+        state_sds, axes = sp.abstract_train_state(cfg, K, use_lbgm)
+        batch_sds = sp.train_batch_specs(cfg, shape_cfg, K)
+        state_sh = tr.train_state_shardings(state_sds, axes, cfg, mesh,
+                                            embed_shard)
+        batch_sh = tr.batch_shardings(batch_sds, mesh)
+        sharded_step = None
+        if sharded_lbgm and use_lbgm and cfg.lbgm.variant == "topk":
+            import jax.numpy as jnp2
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.core import lbgm_sharded as ls
+            gspecs = {k: sh.spec for k, sh in state_sh["params"].items()}
+            lbg_sds, lbg_sh = ls.sharded_lbg_layout(
+                state_sds["params"], gspecs, mesh, cfg.lbgm.k_frac)
+            # leading client axis on the stored state
+            state_sds["lbg"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype),
+                lbg_sds, is_leaf=lambda x: isinstance(x,
+                                                      jax.ShapeDtypeStruct))
+            state_sh["lbg"] = jax.tree.map(
+                lambda sh_: NamedSharding(mesh, P(None, *sh_.spec)), lbg_sh)
+            sharded_step = ls.make_sharded_topk_step(
+                cfg, mesh, gspecs, cfg.lbgm.delta_threshold)
+        step = tr.make_train_step(cfg, K, lr, use_lbgm=use_lbgm,
+                                  agg_dtype=agg_dtype,
+                                  sharded_step=sharded_step)
+        with mesh:
+            lowered = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                              donate_argnums=(0,)).lower(state_sds, batch_sds)
+    elif shape_cfg.kind == "prefill":
+        params_sds, axes = sp.abstract_params(cfg)
+        psh = shd.params_shardings(axes, params_sds, cfg.dp_mode, mesh)
+        batch_sds = sp.prefill_batch_specs(cfg, shape_cfg)
+        batch_sh = tr.batch_shardings(batch_sds, mesh)
+        fn = lambda p, b: prefill_logits(p, cfg, b["tokens"], b.get("extra"))
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=(psh, batch_sh)).lower(
+                params_sds, batch_sds)
+    else:  # decode
+        params_sds, axes = sp.abstract_params(cfg)
+        psh = shd.params_shardings(axes, params_sds, cfg.dp_mode, mesh)
+        state_sds, st_axes = sp.abstract_decode_state(
+            cfg, shape_cfg.global_batch, shape_cfg.seq_len)
+        st_sh = shd.state_shardings(st_axes, state_sds, mesh)
+        tok_sds = sp.decode_token_spec(shape_cfg)
+        tok_sh = tr.batch_shardings(tok_sds, mesh)
+        fn = lambda p, s, t: serve_step(p, cfg, s, t)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=(psh, st_sh, tok_sh),
+                              donate_argnums=(1,)).lower(
+                params_sds, state_sds, tok_sds)
+
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            mem[attr] = int(getattr(ma, attr, 0) or 0)
+        print(ma)
+    except Exception as e:  # pragma: no cover
+        mem["error"] = str(e)
+    try:
+        cost_list = compiled.cost_analysis()
+        cost = cost_list[0] if isinstance(cost_list, list) else cost_list
+        print({k: cost[k] for k in ("flops", "bytes accessed")
+               if k in cost})
+    except Exception as e:  # pragma: no cover
+        cost = {}
+        print("cost_analysis failed:", e)
+
+    hlo = compiled.as_text()
+    chips = mesh.devices.size
+    mf = rl.model_flops(cfg, shape_cfg, active_param_count(cfg))
+    report = rl.build_report(arch, shape_name, mesh_name, chips,
+                             dict(cost) if cost else {}, hlo, mf)
+    coll = rl.collective_bytes(hlo)
+    row = report.row()
+    row.update(status="ok", compile_s=t_compile, memory=mem,
+               collectives={k: v for k, v in coll.items()},
+               hbm_per_device_gb=(mem.get("argument_size_in_bytes", 0)
+                                  + mem.get("temp_size_in_bytes", 0)
+                                  + mem.get("output_size_in_bytes", 0)) / 2**30)
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-lbgm", action="store_true",
+                    help="vanilla-FL baseline step (no LBGM state)")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll scans for accurate cost analysis "
+                         "(roofline pass; scan run stays the memory proof)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [(False, "pod16x16"), (True, "pod2x16x16")]
+    else:
+        mp = args.multi_pod
+        meshes = [(mp, "pod2x16x16" if mp else "pod16x16")]
+
+    archs = [args.arch] if args.arch else ASSIGNED_ARCHS
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for multi_pod, mesh_name in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{mesh_name}/{arch}__{shape}"
+                print(f"=== {tag} ===", flush=True)
+                try:
+                    row = lower_pair(arch, shape, mesh, mesh_name,
+                                     use_lbgm=not args.no_lbgm,
+                                     unroll=args.unroll)
+                except Exception:
+                    traceback.print_exc()
+                    row = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "FAILED",
+                           "error": traceback.format_exc(limit=4)}
+                    failures.append(tag)
+                d = os.path.join(args.out, mesh_name)
+                os.makedirs(d, exist_ok=True)
+                suffix = "__vanilla" if args.no_lbgm else ""
+                suffix += "__unroll" if args.unroll else ""
+                with open(os.path.join(d, f"{arch}__{shape}{suffix}.json"),
+                          "w") as f:
+                    json.dump(row, f, indent=1, default=str)
+                if row["status"] == "ok":
+                    print(f"  ok compile={row['compile_s']:.1f}s "
+                          f"dominant={row['dominant']} "
+                          f"terms=({row['compute_s']:.4f}, "
+                          f"{row['memory_s']:.4f}, "
+                          f"{row['collective_s']:.4f})s "
+                          f"useful={row['useful_flops_ratio']:.3f}",
+                          flush=True)
+                elif row["status"] == "skipped":
+                    print("  skipped:", row["reason"], flush=True)
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete: all pairs lowered + compiled")
+
+
+if __name__ == "__main__":
+    main()

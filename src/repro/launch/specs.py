@@ -1,0 +1,84 @@
+"""Abstract (ShapeDtypeStruct) inputs for every (arch x shape) pair —
+weak-type-correct, shardable, zero device allocation."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.frontends import extra_embed_shape
+from repro.models.transformer import init_lm
+from repro.serve.decode import init_decode_state
+from repro.train.trainer import effective_clients, init_train_state
+
+
+def abstract_params(cfg: ArchConfig):
+    """(params SDS pytree, logical axes) without allocating."""
+    holder = {}
+
+    def f(key):
+        p, axes = init_lm(key, cfg)
+        holder["axes"] = axes
+        return p
+
+    sds = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return sds, holder["axes"]
+
+
+def abstract_train_state(cfg: ArchConfig, num_clients: int,
+                         use_lbgm: bool = True):
+    holder = {}
+
+    def f(key):
+        st, axes = init_train_state(key, cfg, num_clients, use_lbgm)
+        holder["axes"] = axes
+        return st
+
+    sds = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return sds, holder["axes"]
+
+
+def abstract_decode_state(cfg: ArchConfig, batch: int, seq_len: int):
+    holder = {}
+
+    def f():
+        st, axes = init_decode_state(cfg, batch, seq_len)
+        holder["axes"] = axes
+        return st
+
+    sds = jax.eval_shape(f)
+    return sds, holder["axes"]
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig,
+                      num_clients: int) -> Dict[str, Any]:
+    K = num_clients
+    b = shape.global_batch // K
+    T = shape.seq_len
+    tau = cfg.lbgm.local_steps if cfg.dp_mode == "replicated" else 1
+    lead: Tuple[int, ...] = (K, tau, b) if tau > 1 else (K, b)
+    specs = {
+        "tokens": jax.ShapeDtypeStruct(lead + (T,), jnp.int32),
+        "labels": jax.ShapeDtypeStruct(lead + (T,), jnp.int32),
+    }
+    es = extra_embed_shape(cfg, b)
+    if es is not None:
+        specs["extra"] = jax.ShapeDtypeStruct(lead + es[1:],
+                                              jnp.dtype(cfg.dtype))
+    return specs
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, T = shape.global_batch, shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((B, T), jnp.int32)}
+    es = extra_embed_shape(cfg, B)
+    if es is not None:
+        specs["extra"] = jax.ShapeDtypeStruct(es, jnp.dtype(cfg.dtype))
+    return specs
+
+
+def decode_token_spec(shape: ShapeConfig):
+    return jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)

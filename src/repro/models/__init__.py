@@ -1,0 +1,1 @@
+from repro.models.transformer import forward, init_lm, lm_loss  # noqa: F401

@@ -1,0 +1,36 @@
+"""Modality frontend STUBS (the one sanctioned carve-out, DESIGN.md §4).
+
+``[audio]`` / ``[vlm]`` architectures specify the transformer backbone only;
+these helpers produce the precomputed frame/patch embeddings the backbone
+consumes — ShapeDtypeStructs for dry-runs, random arrays for smoke tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def extra_embed_shape(cfg: ArchConfig, batch: int):
+    """Shape of the stub embedding input, or None for pure-text archs."""
+    if cfg.encdec:
+        return (batch, cfg.encoder_seq, cfg.d_model)
+    if cfg.vision_tokens:
+        return (batch, cfg.vision_tokens, cfg.d_model)
+    return None
+
+
+def extra_embed_spec(cfg: ArchConfig, batch: int):
+    shape = extra_embed_shape(cfg, batch)
+    if shape is None:
+        return None
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(cfg.dtype))
+
+
+def make_stub_embeds(key, cfg: ArchConfig, batch: int):
+    shape = extra_embed_shape(cfg, batch)
+    if shape is None:
+        return None
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(
+        jnp.dtype(cfg.dtype))

@@ -1,0 +1,87 @@
+"""Mixture-of-Experts FFN with capacity-based gather/scatter routing.
+
+TPU adaptation: instead of a dense one-hot dispatch einsum (O(T^2) FLOPs at
+high expert counts) we build an (E, C) token-index buffer with a cumsum
+position assignment and use pure gathers/scatters, so expert FLOPs stay
+O(capacity_factor x active FLOPs). Experts are sharded over the ``model``
+mesh axis ("expert" logical axis); in fsdp mode d_ff additionally shards
+over ``data``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ParamStore, silu
+
+
+def init_moe(store: ParamStore, prefix: str, cfg: ArchConfig, stack: int = 0):
+    """stack>0: leading `layers` axis for lax.scan."""
+    E, d, ff = cfg.moe.num_experts, cfg.d_model, cfg.d_ff
+    lead = (stack,) if stack else ()
+    lax_ = ("layers",) if stack else ()
+    store.param(f"{prefix}/router", lead + (d, E), lax_ + ("embed", "expert"),
+                scale=0.02)
+    store.param(f"{prefix}/w_gate", lead + (E, d, ff),
+                lax_ + ("expert", "embed", "ff"))
+    store.param(f"{prefix}/w_up", lead + (E, d, ff),
+                lax_ + ("expert", "embed", "ff"))
+    store.param(f"{prefix}/w_down", lead + (E, ff, d),
+                lax_ + ("expert", "ff", "embed"))
+
+
+def apply_moe(p, x: jax.Array, cfg: ArchConfig):
+    """x: (B, T, d) -> (out (B, T, d), aux_loss scalar).
+
+    Routing/capacity is computed independently per example (B is the sharded
+    axis), keeping dispatch local to the data shard.
+    """
+    B, T, d = x.shape
+    E, k, cf = cfg.moe.num_experts, cfg.moe.top_k, cfg.moe.capacity_factor
+    C = max(1, int(T * k * cf / E))
+
+    logits = jnp.einsum("btd,de->bte", x, p["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (B,T,E) fp32
+    top_w, top_e = jax.lax.top_k(probs, k)                   # (B,T,k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # flatten the k routes into the token axis: (B, T*k)
+    routes = top_e.reshape(B, T * k)
+    route_w = top_w.reshape(B, T * k)
+    onehot = jax.nn.one_hot(routes, E, dtype=jnp.int32)      # (B,T*k,E)
+    pos_all = jnp.cumsum(onehot, axis=1) - onehot            # position in expert
+    pos = jnp.sum(pos_all * onehot, axis=-1)                 # (B,T*k)
+    keep = pos < C
+
+    # scatter token indices into the (E*C) dispatch buffer (dropped -> clipped,
+    # masked out at combine time)
+    token_idx = jnp.tile(jnp.arange(T * k) // k, (B, 1))     # source token
+    dest = routes * C + jnp.where(keep, pos, C * E)          # OOB when dropped
+    buf = jnp.zeros((B, E * C), jnp.int32)
+    buf = jax.vmap(lambda b, dst, src: b.at[dst].set(src, mode="drop"))(
+        buf, dest, token_idx)
+
+    gathered = jnp.take_along_axis(
+        x, buf[..., None].clip(0, T - 1), axis=1)            # (B, E*C, d)
+    gx = gathered.reshape(B, E, C, d)
+
+    # expert SwiGLU, experts sharded over the model axis
+    g = jnp.einsum("becd,edf->becf", gx, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", gx, p["w_up"])
+    y = jnp.einsum("becf,efd->becd", silu(g) * u, p["w_down"])
+    y = y.reshape(B, E * C, d)
+
+    # combine: each route gathers its slot back, weighted, drop-masked
+    slot = (routes * C + pos).clip(0, E * C - 1)             # (B,T*k)
+    back = jnp.take_along_axis(y, slot[..., None], axis=1)   # (B,T*k,d)
+    w = (route_w * keep).astype(back.dtype)
+    out = jnp.sum(back.reshape(B, T, k, d) * w.reshape(B, T, k, 1), axis=2)
+
+    # Switch-style load-balance aux loss
+    frac_routed = jnp.mean(
+        jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_routed * mean_prob) * cfg.moe.router_aux_loss
+    return out.astype(x.dtype), aux

@@ -1,0 +1,94 @@
+"""RecurrentGemma / Griffin recurrent block: temporal conv + RG-LRU.
+
+(arXiv:2402.19427). RG-LRU per channel:
+    r_t = sigmoid(W_a x_t + b_a)         (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)         (input gate)
+    a_t = a^(c * r_t),  a = sigmoid(Lambda),  c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+TPU adaptation: the sequential recurrence is evaluated with
+``jax.lax.associative_scan`` (log-depth, parallel) in fp32 during training /
+prefill, and as a single fused step during decode (O(1) state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ParamStore, silu
+
+C_EXP = 8.0
+CONV_W = 4
+
+
+def init_rglru(store: ParamStore, prefix: str, cfg: ArchConfig, stack: int = 0):
+    d = cfg.d_model
+    lead = (stack,) if stack else ()
+    lax_ = ("layers",) if stack else ()
+    store.param(f"{prefix}/w_in", lead + (d, d), lax_ + ("embed", "embed2"))
+    store.param(f"{prefix}/w_gate_branch", lead + (d, d),
+                lax_ + ("embed", "embed2"))
+    store.param(f"{prefix}/conv_w", lead + (CONV_W, d), lax_ + ("conv", "embed"),
+                scale=0.1)
+    store.param(f"{prefix}/conv_b", lead + (d,), lax_ + ("embed",), init="zeros")
+    store.param(f"{prefix}/w_a", lead + (d, d), lax_ + ("embed", "embed2"))
+    store.param(f"{prefix}/b_a", lead + (d,), lax_ + ("embed",), init="zeros")
+    store.param(f"{prefix}/w_x", lead + (d, d), lax_ + ("embed", "embed2"))
+    store.param(f"{prefix}/b_x", lead + (d,), lax_ + ("embed",), init="zeros")
+    store.param(f"{prefix}/lam", lead + (d,), lax_ + ("embed",), init="uniform",
+                scale=2.0)
+    store.param(f"{prefix}/w_out", lead + (d, d), lax_ + ("embed", "embed2"))
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv width 4. x:(B,T,d), w:(4,d)."""
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], CONV_W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(CONV_W)) + b
+    new_state = xp[:, -(CONV_W - 1):]
+    return out, new_state
+
+
+def _rglru_scan(a, bx, h0=None):
+    """h_t = a_t h_{t-1} + bx_t via associative scan; a,bx: (B,T,d) fp32."""
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+    aa, hh = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return hh
+
+
+def apply_rglru(p, x: jax.Array, cfg: ArchConfig, state=None, conv_state=None):
+    """Griffin recurrent block. x:(B,T,d) -> (out, (h_state, conv_state))."""
+    gate = silu(jnp.einsum("btd,de->bte", x, p["w_gate_branch"]))
+    xi = jnp.einsum("btd,de->bte", x, p["w_in"])
+    xi, new_conv = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+
+    x32 = xi.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", x32,
+                                  p["w_a"].astype(jnp.float32)) +
+                       p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("btd,de->bte", x32,
+                                  p["w_x"].astype(jnp.float32)) +
+                       p["b_x"].astype(jnp.float32))
+    log_a0 = jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))
+    log_a = C_EXP * r * log_a0                       # log a_t <= 0
+    a = jnp.exp(log_a)
+    bx = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x32)
+    h = _rglru_scan(a, bx, h0=state)
+    new_state = h[:, -1]
+    out = (h.astype(x.dtype) * gate)
+    out = jnp.einsum("btd,de->bte", out, p["w_out"])
+    return out, (new_state, new_conv)
+
+
+def rglru_decode_step(p, x1: jax.Array, cfg: ArchConfig, state, conv_state):
+    """Single-token decode (sequential form, no scan)."""
+    return apply_rglru(p, x1, cfg, state=state, conv_state=conv_state)

@@ -1,0 +1,162 @@
+"""RWKV-6 "Finch" time-mixing block (arXiv:2404.05892), chunked for TPU.
+
+Recurrence per head (state S in R^{dk x dv}):
+    out_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+with *data-dependent* per-channel decay w_t = exp(-exp(w0 + lora(x_t))).
+
+TPU adaptation: the per-step scan would serialize 4k-512k steps and blow up
+saved activations; we use the standard chunked linear-attention form (chunk
+size 64, fp32 internals): within-chunk interactions become a masked matmul on
+decay-rescaled r/k, cross-chunk state is carried by a short scan. The Pallas
+kernel version lives in ``repro.kernels.rwkv6_scan``; this jnp version is the
+lowering/roofline path and the oracle's chunked counterpart.
+
+Simplification vs the full Finch block (documented in DESIGN.md): static
+learned token-shift mixing coefficients per projection (mu), with the
+data-dependent LoRA applied to the decay only (the headline Finch feature).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ParamStore, group_norm_heads, silu
+
+LORA_DIM = 64
+CHUNK = 64
+EXP_CLAMP = 60.0
+
+
+def init_rwkv6(store: ParamStore, prefix: str, cfg: ArchConfig, stack: int = 0):
+    d = cfg.d_model
+    lead = (stack,) if stack else ()
+    lax_ = ("layers",) if stack else ()
+    for name in ("r", "k", "v", "g", "o"):
+        store.param(f"{prefix}/w_{name}", lead + (d, d),
+                    lax_ + ("embed", "embed2"))
+    for name in ("r", "k", "v", "g", "w"):
+        store.param(f"{prefix}/mu_{name}", lead + (d,), lax_ + ("embed",),
+                    init="uniform", scale=0.5)
+    store.param(f"{prefix}/w0", lead + (d,), lax_ + ("embed",), init="zeros")
+    store.param(f"{prefix}/lora_a", lead + (d, LORA_DIM),
+                lax_ + ("embed", "lora"), scale=0.01)
+    store.param(f"{prefix}/lora_b", lead + (LORA_DIM, d),
+                lax_ + ("lora", "embed"), scale=0.01)
+    store.param(f"{prefix}/u", lead + (d,), lax_ + ("embed",),
+                init="uniform", scale=0.5)
+    store.param(f"{prefix}/ln_g", lead + (d,), lax_ + ("embed",), init="ones")
+
+
+def _shift(x):
+    """token shift: x_{t-1} (zeros at t=0)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def chunked_wkv(r, k, v, logw, u, *, chunk: int = CHUNK, state0=None,
+                unroll: bool = False):
+    """Chunked RWKV6 recurrence.
+
+    r,k,v: (B, T, H, hd); logw: (B, T, H, hd) (log decay, <= 0); u: (H, hd).
+    Returns (out (B,T,H,hd) fp32, final state (B,H,hd,hd) fp32).
+    """
+    B, T, H, hd = r.shape
+    assert T % chunk == 0 or T < chunk, (T, chunk)
+    c = min(chunk, T)
+    n = T // c
+    f32 = jnp.float32
+    r, k, v, logw = (a.astype(f32) for a in (r, k, v, logw))
+    rs = r.reshape(B, n, c, H, hd).transpose(1, 0, 3, 2, 4)   # (n,B,H,c,hd)
+    ks = k.reshape(B, n, c, H, hd).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(B, n, c, H, hd).transpose(1, 0, 3, 2, 4)
+    lw = logw.reshape(B, n, c, H, hd).transpose(1, 0, 3, 2, 4)
+    if state0 is None:
+        state0 = jnp.zeros((B, H, hd, hd), f32)
+
+    tri = jnp.tril(jnp.ones((c, c), f32), -1)                 # strict lower
+    eye = jnp.eye(c, dtype=f32)
+
+    def body(S, xs):
+        rc, kc, vc, lwc = xs                                  # (B,H,c,hd)
+        cum = jnp.cumsum(lwc, axis=2)                         # c_t = sum_{s<=t}
+        cum_in = cum - lwc                                    # c_{t-1}
+        r_dec = rc * jnp.exp(cum_in)                          # r_i e^{c_{i-1}}
+        # clamp: once a channel has decayed by e^-EXP_CLAMP within the chunk
+        # its cross-position contribution is negligible; unclamped, exp(-cum)
+        # overflows fp32 for aggressively-decaying channels (standard chunked
+        # linear-attention trick).
+        k_dec = kc * jnp.exp(jnp.minimum(-cum, EXP_CLAMP))    # k_j e^{-c_j}
+        # intra-chunk: A[i,j] = sum_d r_i e^{c_{i-1}} k_j e^{-c_j}, j < i
+        A = jnp.einsum("bhid,bhjd->bhij", r_dec, k_dec) * tri
+        A += jnp.einsum("bhid,bhjd->bhij", rc * u[:, None, :], kc) * eye  # diag bonus
+        out = jnp.einsum("bhij,bhjd->bhid", A, vc)
+        out += jnp.einsum("bhid,bhde->bhie", r_dec, S)        # inter-chunk
+        # state update: S <- diag(e^{c_chunk}) S + sum_j e^{c_chunk - c_j} k_j v_j^T
+        total = cum[:, :, -1:, :]                             # (B,H,1,hd)
+        S = S * jnp.exp(total).transpose(0, 1, 3, 2) + jnp.einsum(
+            "bhjd,bhje->bhde", kc * jnp.exp(total - cum), vc)
+        return S, out
+
+    if unroll:   # dry-run cost pass (see ArchConfig.unroll)
+        S = state0
+        outs = []
+        for i in range(n):
+            S, o = body(S, (rs[i], ks[i], vs[i], lw[i]))
+            outs.append(o)
+        outs = jnp.stack(outs)
+    else:
+        S, outs = jax.lax.scan(body, state0, (rs, ks, vs, lw))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, T, H, hd)
+    return out, S
+
+
+def rwkv6_decay(p, xw: jax.Array) -> jax.Array:
+    """log decay in (-inf, 0): -exp(w0 + tanh(x A) B)."""
+    lora = jnp.einsum("btd,dl->btl", xw.astype(jnp.float32),
+                      p["lora_a"].astype(jnp.float32))
+    lora = jnp.einsum("btl,ld->btd", jnp.tanh(lora),
+                      p["lora_b"].astype(jnp.float32))
+    return -jnp.exp(p["w0"].astype(jnp.float32) + lora)
+
+
+def apply_rwkv6(p, x: jax.Array, cfg: ArchConfig, state=None, shifted=None):
+    """Time-mixing. x: (B,T,d). state/shifted given in decode mode.
+
+    Returns (out, (new_state, last_x)) — the carries are used by serve_step.
+    """
+    B, T, d = x.shape
+    H = cfg.n_heads
+    hd = cfg.resolved_head_dim
+    xs = _shift(x) if shifted is None else jnp.concatenate(
+        [shifted[:, None], x[:, :-1]], axis=1)
+
+    proj = {}
+    for name in ("r", "k", "v", "g"):
+        xm = _mix(x, xs, p[f"mu_{name}"])
+        proj[name] = jnp.einsum("btd,de->bte", xm, p[f"w_{name}"])
+    xw = _mix(x, xs, p["mu_w"])
+    logw = rwkv6_decay(p, xw)                                 # (B,T,d) fp32
+
+    r = proj["r"].reshape(B, T, H, hd)
+    k = proj["k"].reshape(B, T, H, hd)
+    v = proj["v"].reshape(B, T, H, hd)
+    u = p["u"].astype(jnp.float32).reshape(H, hd)
+    out, new_state = chunked_wkv(r, k, v, logw.reshape(B, T, H, hd), u,
+                                 chunk=CHUNK if T >= CHUNK else T,
+                                 state0=state, unroll=cfg.unroll)
+    out = group_norm_heads(out, jnp.ones((hd,), jnp.float32))
+    out = out.reshape(B, T, d).astype(x.dtype) * silu(proj["g"])
+    out = jnp.einsum("btd,de->bte", out, p["w_o"])
+    return out, (new_state, x[:, -1])
+
+
+def rwkv6_decode_step(p, x1: jax.Array, cfg: ArchConfig, state, last_x):
+    """Single-token decode: x1 (B,1,d); O(1) per token (recurrent form)."""
+    out, (new_state, new_last) = apply_rwkv6(p, x1, cfg, state=state,
+                                             shifted=last_x)
+    return out, (new_state, new_last)

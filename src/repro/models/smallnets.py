@@ -1,0 +1,71 @@
+"""Paper-native small models: the CNN (S1) and FCN (S2) classifiers used in
+the paper's FL experiments (Figs. 5-8), implemented in raw JAX.
+
+Inputs are (B, 28, 28, 1) image-like arrays (synthetic stand-ins for
+MNIST/FMNIST since the container is offline).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ParamStore
+
+IMG = 28
+
+
+def init_cnn(key, cfg: ArchConfig):
+    store = ParamStore(key, jnp.float32)
+    ch = cfg.d_model  # base width (32)
+    chans = [1, ch, ch, 2 * ch, 2 * ch][: cfg.n_layers + 1]
+    for i in range(cfg.n_layers):
+        store.param(f"conv{i}/w", (3, 3, chans[i], chans[i + 1]),
+                    ("kh", "kw", "cin", "cout"), scale=0.1)
+        store.param(f"conv{i}/b", (chans[i + 1],), ("cout",), init="zeros")
+    # two 2x2 maxpools -> 7x7 spatial
+    feat = 7 * 7 * chans[cfg.n_layers]
+    store.param("fc/w", (feat, cfg.vocab_size), ("feat", "classes"))
+    store.param("fc/b", (cfg.vocab_size,), ("classes",), init="zeros")
+    return store.params, store.axes
+
+
+def apply_cnn(params, cfg: ArchConfig, x):
+    """x: (B, 28, 28, 1) -> logits (B, classes)."""
+    h = x
+    for i in range(cfg.n_layers):
+        h = jax.lax.conv_general_dilated(
+            h, params[f"conv{i}/w"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = jax.nn.relu(h + params[f"conv{i}/b"])
+        if i in (1, cfg.n_layers - 1):  # pool twice -> 7x7
+            h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    return h @ params["fc/w"] + params["fc/b"]
+
+
+def init_fcn(key, cfg: ArchConfig):
+    store = ParamStore(key, jnp.float32)
+    d = cfg.d_model
+    store.param("fc1/w", (IMG * IMG, d), ("feat", "hidden"))
+    store.param("fc1/b", (d,), ("hidden",), init="zeros")
+    store.param("fc2/w", (d, cfg.vocab_size), ("hidden", "classes"))
+    store.param("fc2/b", (cfg.vocab_size,), ("classes",), init="zeros")
+    return store.params, store.axes
+
+
+def apply_fcn(params, cfg: ArchConfig, x):
+    h = x.reshape(x.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc1/w"] + params["fc1/b"])
+    return h @ params["fc2/w"] + params["fc2/b"]
+
+
+def classifier_loss(apply_fn, params, cfg, x, y):
+    logits = apply_fn(params, cfg, x)
+    logp = jax.nn.log_softmax(logits)
+    ce = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    return ce, {"ce": ce, "acc": acc}

@@ -1,0 +1,3 @@
+from repro.optim.sgd import sgd_init, sgd_update  # noqa: F401
+from repro.optim.adam import adam_init, adam_update  # noqa: F401
+from repro.optim.schedules import constant, cosine, make_schedule  # noqa: F401

@@ -1,0 +1,31 @@
+"""Adam (fp32 moments) — framework option beyond the paper's SGD."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_init(params):
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, opt_state, lr, b1=0.9, b2=0.999, eps=1e-8,
+                weight_decay: float = 0.0):
+    t = opt_state["t"] + 1
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+                     opt_state["m"], grads)
+    v = jax.tree.map(
+        lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        opt_state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, mm, vv):
+        step = lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+        if weight_decay:
+            step = step + lr * weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype)
+
+    return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "t": t}

@@ -1,0 +1,31 @@
+"""SGD (+ optional momentum). The paper trains with plain SGD."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params, momentum: float = 0.0):
+    if momentum == 0.0:
+        return {}
+    return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                              params)}
+
+
+def sgd_update(params, grads, opt_state, lr, momentum: float = 0.0,
+               weight_decay: float = 0.0):
+    if momentum == 0.0:
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * (g.astype(jnp.float32)
+                                  + weight_decay * p.astype(jnp.float32))
+                          ).astype(p.dtype),
+            params, grads)
+        return new_params, opt_state
+    m = jax.tree.map(
+        lambda mm, g: momentum * mm + g.astype(jnp.float32),
+        opt_state["m"], grads)
+    new_params = jax.tree.map(
+        lambda p, mm: (p.astype(jnp.float32) - lr * mm).astype(p.dtype),
+        params, m)
+    return new_params, {"m": m}

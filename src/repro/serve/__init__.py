@@ -1,0 +1,1 @@
+from repro.serve.decode import init_decode_state, serve_step  # noqa: F401

@@ -1,0 +1,193 @@
+"""Serving: single-token decode with a KV cache of ``cache_len``.
+
+Cache layouts per block kind:
+  attn  — full ring cache of length seq_len (keys stored post-RoPE)
+  swa   — ring cache of length min(window, seq_len)  (sub-quadratic path)
+  rwkv6 — recurrent state (B, H, hd, hd) + last token embed (O(1)/token)
+  rglru — hidden state (B, d) + conv tail (B, 3, d)     (O(1)/token)
+
+``long_500k`` policy (DESIGN.md §4): dense archs decode through their "swa"
+variant; ssm/hybrid decode through recurrent state; whisper skips.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import rglru as rglru_lib
+from repro.models import rwkv6 as rwkv6_lib
+from repro.models.attention import (decode_attention, mrope_rotate,
+                                    rope_rotate)
+from repro.models.common import rms_norm, subtree
+from repro.models.transformer import uses_scan
+
+
+def _cache_len(cfg: ArchConfig, kind: str, seq_len: int,
+               force_window: bool) -> int:
+    if kind == "swa" or (force_window and kind == "attn"):
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def _block_cache(cfg: ArchConfig, kind: str, B: int, L: int):
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    if kind in ("attn", "swa"):
+        shape = (B, L, cfg.n_kv_heads, hd)
+        axes = ("batch", "cache", "kv_heads", "head_dim")
+        return ({"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)},
+                {"k": axes, "v": axes})
+    if kind == "rwkv6":
+        return ({"s": jnp.zeros((B, cfg.n_heads, hd, hd), jnp.float32),
+                 "last": jnp.zeros((B, cfg.d_model), dt)},
+                {"s": ("batch", "heads", "head_dim", "head_dim2"),
+                 "last": ("batch", "embed")})
+    if kind == "rglru":
+        return ({"h": jnp.zeros((B, cfg.d_model), jnp.float32),
+                 "conv": jnp.zeros((B, rglru_lib.CONV_W - 1, cfg.d_model),
+                                   dt)},
+                {"h": ("batch", "embed"), "conv": ("batch", "conv", "embed")})
+    raise ValueError(kind)
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, seq_len: int,
+                      use_window: Optional[bool] = None):
+    """Returns (state pytree, logical-axes pytree).
+
+    ``use_window``: force the sliding-window cache for "attn" blocks
+    (the sub-quadratic long-context path). Defaults on for long contexts
+    per cfg.long_context.
+    """
+    if use_window is None:
+        use_window = cfg.long_context == "swa" and seq_len > 65536
+    state: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    axes: Dict[str, Any] = {"pos": ()}
+    if cfg.encdec:
+        state["enc_out"] = jnp.zeros((batch, cfg.encoder_seq, cfg.d_model),
+                                     jnp.dtype(cfg.dtype))
+        axes["enc_out"] = ("batch", "enc_seq", "embed")
+    if uses_scan(cfg):
+        kind = cfg.block_pattern[0]
+        L = _cache_len(cfg, kind, seq_len, use_window)
+        c, a = _block_cache(cfg, kind, batch, L)
+        state["layers"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), c)
+        axes["layers"] = jax.tree.map(lambda t: ("layers",) + t, a,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+    else:
+        for i in range(cfg.n_layers):
+            kind = cfg.block_kind(i) if not cfg.encdec else "attn"
+            L = _cache_len(cfg, kind, seq_len, use_window)
+            c, a = _block_cache(cfg, kind, batch, L)
+            state[f"layer_{i:02d}"] = c
+            axes[f"layer_{i:02d}"] = a
+    return state, axes
+
+
+def _decode_attn(p, x1, cfg: ArchConfig, cache, pos, kind):
+    """x1 (B,1,d); ring-buffer kv cache update + attention over cache."""
+    B = x1.shape[0]
+    hd, nq, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    L = cache["k"].shape[1]
+    q = jnp.einsum("btd,dh->bth", x1, p["wa_q"]).reshape(B, 1, nq, hd)
+    k = jnp.einsum("btd,dh->bth", x1, p["wa_k"]).reshape(B, 1, nkv, hd)
+    v = jnp.einsum("btd,dh->bth", x1, p["wa_v"]).reshape(B, 1, nkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    posb = jnp.broadcast_to(pos[None, None], (B, 1))
+    if cfg.mrope:
+        # after the vision prefix, all three position streams advance together
+        pos3 = jnp.broadcast_to(pos[None, None, None], (3, B, 1))
+        q = mrope_rotate(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+        k = mrope_rotate(k, pos3, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = rope_rotate(q, posb, cfg.rope_theta)
+        k = rope_rotate(k, posb, cfg.rope_theta)
+    slot = jnp.mod(pos, L)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    o = decode_attention(q, k_cache, v_cache,
+                         valid_len=jnp.minimum(pos + 1, L))
+    o = jnp.einsum("bth,hd->btd", o.reshape(B, 1, nq * hd), p["wa_o"])
+    return o, {"k": k_cache, "v": v_cache}
+
+
+def _decode_cross_attn(p, x1, enc_out, cfg: ArchConfig):
+    B = x1.shape[0]
+    Te = enc_out.shape[1]
+    hd, nq, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = jnp.einsum("btd,dh->bth", x1, p["wx_q"]).reshape(B, 1, nq, hd)
+    k = jnp.einsum("btd,dh->bth", enc_out, p["wx_k"]).reshape(B, Te, nkv, hd)
+    v = jnp.einsum("btd,dh->bth", enc_out, p["wx_v"]).reshape(B, Te, nkv, hd)
+    o = decode_attention(q, k, v, valid_len=Te)
+    return jnp.einsum("bth,hd->btd", o.reshape(B, 1, nq * hd), p["wx_o"])
+
+
+def _decode_ffn(p, x1, cfg: ArchConfig):
+    from repro.models.transformer import _apply_ffn
+    out, _ = _apply_ffn(p, x1, cfg)
+    return out
+
+
+def _decode_block(p, x1, cfg: ArchConfig, kind, cache, pos, enc_out=None):
+    h = rms_norm(x1, p["norm1"], cfg.norm_eps)
+    if kind in ("attn", "swa"):
+        h, cache = _decode_attn(p, h, cfg, cache, pos, kind)
+    elif kind == "rwkv6":
+        h, (s, last) = rwkv6_lib.rwkv6_decode_step(
+            subtree(p, "tmix"), h, cfg, cache["s"], cache["last"])
+        cache = {"s": s, "last": last}
+    elif kind == "rglru":
+        h, (hs, conv) = rglru_lib.rglru_decode_step(
+            subtree(p, "rec"), h, cfg, cache["h"], cache["conv"])
+        cache = {"h": hs, "conv": conv}
+    x1 = x1 + h
+    if enc_out is not None:
+        hx = rms_norm(x1, p["norm_x"], cfg.norm_eps)
+        x1 = x1 + _decode_cross_attn(p, hx, enc_out, cfg)
+    h2 = rms_norm(x1, p["norm2"], cfg.norm_eps)
+    return x1 + _decode_ffn(p, h2, cfg), cache
+
+
+def serve_step(params, cfg: ArchConfig, state, token: jax.Array):
+    """One decode step. token (B, 1) int32 -> (logits (B,1,V), new state)."""
+    B = token.shape[0]
+    pos = state["pos"]
+    x = jnp.take(params["embed"], token, axis=0)
+    new_state = dict(state)
+
+    if cfg.encdec:
+        enc_out = state["enc_out"]
+        for i in range(cfg.n_layers):
+            x, c = _decode_block(subtree(params, f"dec_{i:02d}"), x, cfg,
+                                 "attn", state[f"layer_{i:02d}"], pos,
+                                 enc_out=enc_out)
+            new_state[f"layer_{i:02d}"] = c
+    elif uses_scan(cfg):
+        kind = cfg.block_pattern[0]
+        stacked_p = subtree(params, "blocks")
+
+        def body(carry, xs):
+            h = carry
+            layer_p, layer_c = xs
+            h, c = _decode_block(layer_p, h, cfg, kind, layer_c, pos)
+            return h, c
+
+        x, new_caches = jax.lax.scan(body, x, (stacked_p, state["layers"]))
+        new_state["layers"] = new_caches
+    else:
+        for i in range(cfg.n_layers):
+            kind = cfg.block_kind(i)
+            x, c = _decode_block(subtree(params, f"layer_{i:02d}"), x, cfg,
+                                 kind, state[f"layer_{i:02d}"], pos)
+            new_state[f"layer_{i:02d}"] = c
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("btd,dv->btv", x, head)
+    new_state["pos"] = pos + 1
+    return logits, new_state

@@ -1,0 +1,222 @@
+"""Distributed LBGM trainer (pjit) for the assigned architectures.
+
+Clients map onto the data axes of the mesh (DESIGN.md §3):
+
+* ``replicated`` mode — params replicated over data / sharded over model;
+  per-client gradients computed with ``vmap`` over a leading client axis K
+  (sharded over ("pod","data")); dense per-client LBGs (paper Algorithm 1).
+* ``fsdp`` mode — params additionally sharded over data; clients processed
+  sequentially with ``lax.scan`` (one resident gradient) and *top-k
+  compressed* LBGs (paper P3 + App C.1) since K dense LBGs exceed HBM.
+
+The weighted client reduction lowers to the data-axis all-reduce — the
+collective IS the FL server aggregation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import lbgm as lbgm_lib
+from repro.core.tree_math import tree_size
+from repro.models.transformer import init_lm, lm_loss, prefill_logits
+from repro.optim.sgd import sgd_init, sgd_update
+from repro.train import sharding as shd
+
+
+# ------------------------------------------------------------- state
+
+def effective_clients(cfg: ArchConfig, mesh: Mesh, global_batch: int) -> int:
+    dp_total = 1
+    for a in shd.dp_axes(mesh):
+        dp_total *= mesh.shape[a]
+    if cfg.dp_mode == "replicated":
+        k = min(dp_total, global_batch)
+    else:
+        k = max(1, min(cfg.lbgm.num_clients, global_batch // dp_total))
+    while global_batch % k:
+        k -= 1
+    return k
+
+
+def make_loss_fn(cfg: ArchConfig):
+    def loss_fn(params, batch):
+        return lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                       batch.get("extra"))
+    return loss_fn
+
+
+def init_train_state(key: jax.Array, cfg: ArchConfig, num_clients: int,
+                     use_lbgm: bool = True):
+    """Returns (state dict, param logical axes)."""
+    params, axes = init_lm(key, cfg)
+    state: Dict[str, Any] = {"params": params, "opt": sgd_init(params),
+                             "step": jnp.zeros((), jnp.int32)}
+    if use_lbgm and cfg.lbgm.enabled:
+        if cfg.lbgm.variant == "full":
+            state["lbg"] = jax.tree.map(
+                lambda p: jnp.zeros((num_clients,) + p.shape, p.dtype), params)
+        else:
+            one = lbgm_lib.init_topk_lbg(params, cfg.lbgm.k_frac)
+            state["lbg"] = jax.tree.map(
+                lambda l: jnp.zeros((num_clients,) + l.shape, l.dtype), one)
+    return state, axes
+
+
+# ------------------------------------------------------------- steps
+
+def _client_asg(loss_fn, params, client_batch, tau: int, lr):
+    """Accumulated stochastic gradient over tau local SGD steps.
+
+    tau == 1: plain grad (paper P4 distributed-training mode).
+    tau > 1:  local SGD on per-step slices; batch leaves are (tau, b, ...).
+    """
+    if tau == 1:
+        (loss, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, client_batch)
+        return g, loss
+
+    def step(p, batch_t):
+        (loss, m), g = jax.value_and_grad(loss_fn, has_aux=True)(p, batch_t)
+        p2 = jax.tree.map(
+            lambda x, gg: (x.astype(jnp.float32)
+                           - lr * gg.astype(jnp.float32)).astype(x.dtype),
+            p, g)
+        return p2, (g, loss)
+
+    _, (gs, losses) = jax.lax.scan(step, params, client_batch)
+    asg = jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32), 0), gs)
+    return asg, jnp.mean(losses)
+
+
+def make_train_step(cfg: ArchConfig, num_clients: int, lr: float,
+                    use_lbgm: bool = True, delta: Optional[float] = None,
+                    agg_dtype=jnp.float32, sharded_step=None):
+    """agg_dtype: dtype of the reconstructed-gradient aggregation payload
+    (the data-axis collective). fp32 is the paper-faithful default; bf16 is
+    the beyond-paper half-traffic variant (EXPERIMENTS.md §Perf)."""
+    loss_fn = make_loss_fn(cfg)
+    tau = cfg.lbgm.local_steps if cfg.dp_mode == "replicated" else 1
+    delta = cfg.lbgm.delta_threshold if delta is None else delta
+    use_lbgm = use_lbgm and cfg.lbgm.enabled
+    K = num_clients
+
+    def _client_lbgm(g, l):
+        if cfg.lbgm.variant == "topk":
+            return lbgm_lib.lbgm_topk_client_step(g, l, delta,
+                                                  cfg.lbgm.k_frac)
+        return lbgm_lib.lbgm_client_step(g, l, delta)
+
+    def replicated_step(state, batch):
+        params = state["params"]
+        grads, losses = jax.vmap(
+            lambda b: _client_asg(loss_fn, params, b, tau, lr))(batch)
+        if use_lbgm:
+            gt, new_lbg, stats = jax.vmap(_client_lbgm)(grads, state["lbg"])
+        else:
+            gt, new_lbg, stats = grads, None, None
+        agg = jax.tree.map(
+            lambda g: jnp.mean(g.astype(agg_dtype), 0).astype(jnp.float32),
+            gt)
+        params, opt = sgd_update(params, agg, state["opt"], lr)
+        return _finish(state, params, opt, new_lbg, losses, stats)
+
+    def fsdp_step(state, batch):
+        params = state["params"]
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(acc, xs):
+            batch_k, lbg_k = xs
+            g, loss = _client_asg(loss_fn, params, batch_k, 1, lr)
+            if use_lbgm:
+                step_fn = sharded_step or _client_lbgm
+                gt, new_lbg, stats = step_fn(g, lbg_k)
+            else:
+                gt, new_lbg, stats = g, lbg_k, None
+            acc = jax.tree.map(
+                lambda a, x: a + x.astype(agg_dtype).astype(a.dtype) / K,
+                acc, gt)
+            return acc, (new_lbg, loss, stats)
+
+        lbg = state["lbg"] if use_lbgm else jax.tree.map(
+            lambda t: jnp.zeros((K, 1)), {"_": jnp.zeros(())})
+        agg, (new_lbg, losses, stats) = jax.lax.scan(body, zero, (batch, lbg))
+        params, opt = sgd_update(params, agg, state["opt"], lr)
+        if not use_lbgm:
+            new_lbg, stats = None, None
+        return _finish(state, params, opt, new_lbg, losses, stats)
+
+    def _finish(state, params, opt, new_lbg, losses, stats):
+        new_state = dict(state)
+        new_state.update(params=params, opt=opt,
+                         step=state["step"] + 1)
+        metrics = {"loss": jnp.mean(losses)}
+        if stats is not None:
+            new_state["lbg"] = new_lbg
+            metrics.update(
+                frac_scalar=jnp.mean(stats.sent_scalar.astype(jnp.float32)),
+                mean_sin2=jnp.mean(stats.sin2),
+                uplink_floats=jnp.sum(stats.uplink_floats),
+                vanilla_uplink_floats=jnp.asarray(
+                    float(K * tree_size(params)), jnp.float32))
+        return new_state, metrics
+
+    return replicated_step if cfg.dp_mode == "replicated" else fsdp_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def step(params, batch):
+        return prefill_logits(params, cfg, batch["tokens"],
+                              batch.get("extra"))
+    return step
+
+
+# ------------------------------------------------------------- sharding glue
+
+def train_state_shardings(state, axes, cfg: ArchConfig, mesh: Mesh,
+                          embed_shard: str = "vocab"):
+    mode = cfg.dp_mode
+    pshard = shd.params_shardings(axes, state["params"], mode, mesh,
+                                  embed_shard)
+    out: Dict[str, Any] = {
+        "params": pshard,
+        "opt": jax.tree.map(
+            lambda _: None, state["opt"]) if not state["opt"] else
+        {"m": {k: pshard[k] for k in state["params"]}},
+        "step": NamedSharding(mesh, P()),
+    }
+    if "lbg" in state:
+        if cfg.lbgm.variant == "full" and mode == "replicated":
+            dp = shd.dp_axes(mesh)
+            out["lbg"] = {
+                k: NamedSharding(mesh, P(dp, *pshard[k].spec))
+                for k in state["params"]}
+        else:
+            model = mesh.shape.get("model", 1)
+
+            def lbg_spec(leaf):
+                # sparse LBG leaves are (K, nb, kb): shard blocks over model
+                if (leaf.ndim == 3 and model > 1
+                        and leaf.shape[1] % model == 0):
+                    return NamedSharding(mesh, P(None, "model", None))
+                return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+            out["lbg"] = jax.tree.map(lbg_spec, state["lbg"])
+    return out
+
+
+def batch_shardings(batch_spec, mesh: Mesh):
+    """Leading axis (clients or batch) over ("pod","data") when divisible."""
+    dp = shd.dp_axes(mesh)
+    total = 1
+    for a in dp:
+        total *= mesh.shape[a]
+
+    def one(s):
+        lead = dp if (s.shape and s.shape[0] % total == 0) else None
+        return NamedSharding(mesh, P(lead, *([None] * (len(s.shape) - 1))))
+    return jax.tree.map(one, batch_spec)

@@ -1,0 +1,13 @@
+import os
+
+# tests run on the single host CPU device (the 512-device override is
+# exclusively for launch/dryrun.py, per the brief)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

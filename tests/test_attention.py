@@ -1,0 +1,90 @@
+"""Attention correctness: chunking, GQA, windows, RoPE/M-RoPE, decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (attention, decode_attention, mrope_rotate,
+                                    rope_rotate)
+
+
+def _naive(q, k, v, causal=True, window=None, q_offset=0):
+    B, Tq, Hq, hd = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    kk = jnp.repeat(k, g, axis=2)
+    vv = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / np.sqrt(hd)
+    qpos = jnp.arange(Tq)[:, None] + q_offset
+    kpos = jnp.arange(Tk)[None, :]
+    m = jnp.ones((Tq, Tk), bool)
+    if causal:
+        m &= qpos >= kpos
+    if window is not None:
+        m &= (qpos - kpos) < window
+    s = jnp.where(m[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+
+
+@pytest.mark.parametrize("window", [None, 16])
+@pytest.mark.parametrize("tq", [64, 256])
+def test_chunked_matches_naive(key, tq, window):
+    B, Hq, Hkv, hd = 2, 4, 2, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, tq, Hq, hd))
+    k = jax.random.normal(ks[1], (B, tq, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, tq, Hkv, hd))
+    out = attention(q, k, v, causal=True, window=window, q_chunk=32)
+    ref = _naive(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_non_divisible_chunk(key):
+    q = jax.random.normal(key, (1, 96, 2, 8))
+    out = attention(q, q, q, causal=False, q_chunk=64)  # 96 % 64 != 0
+    ref = _naive(q, q, q, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_decode_matches_last_position(key):
+    """decode_attention over a cache == full attention's last row."""
+    B, T, Hq, Hkv, hd = 2, 32, 4, 2, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, T, Hq, hd))
+    k = jax.random.normal(ks[1], (B, T, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, T, Hkv, hd))
+    full = _naive(q, k, v, causal=True)
+    dec = decode_attention(q[:, -1:], k, v, valid_len=T)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(full[:, -1]),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_rope_relative_shift_invariance(key):
+    """RoPE attention logits depend only on relative positions."""
+    B, T, H, hd = 1, 8, 1, 16
+    q = jax.random.normal(key, (B, T, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, H, hd))
+    p0 = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    p1 = p0 + 37
+    s0 = jnp.einsum("bqhd,bkhd->bqk", rope_rotate(q, p0, 1e4),
+                    rope_rotate(k, p0, 1e4))
+    s1 = jnp.einsum("bqhd,bkhd->bqk", rope_rotate(q, p1, 1e4),
+                    rope_rotate(k, p1, 1e4))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mrope_equals_rope_for_text(key):
+    """When the three position streams coincide, M-RoPE == RoPE."""
+    B, T, H, hd = 2, 16, 2, 32
+    x = jax.random.normal(key, (B, T, H, hd))
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    pos3 = jnp.broadcast_to(pos[None], (3, B, T))
+    a = rope_rotate(x, pos, 1e4)
+    b = mrope_rotate(x, pos3, (4, 6, 6), 1e4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)

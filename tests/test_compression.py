@@ -1,0 +1,86 @@
+"""Compression baselines: top-K, SignSGD, ATOMO, error feedback."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis.extra.numpy import arrays
+
+from repro.compression import atomo, error_feedback as ef, signsgd, topk
+from repro.compression import get_compressor
+
+
+def test_topk_keeps_largest_and_zeroes_rest():
+    g = {"w": jnp.asarray([[1.0, -5.0], [0.1, 3.0]])}
+    out, cost = topk.compress(g, k_frac=0.5)
+    w = np.asarray(out["w"])
+    assert w[0, 1] == -5.0 and w[1, 1] == 3.0
+    assert w[0, 0] == 0.0 and w[1, 0] == 0.0
+    assert float(cost) == 1.5 * 2
+
+
+@settings(max_examples=30, deadline=None)
+@given(arrays(np.float32, (32,), elements=st.floats(-5, 5, width=32)))
+def test_topk_energy_dominates_random_subset(a):
+    g = {"w": jnp.asarray(a)}
+    out, _ = topk.compress(g, k_frac=0.25)
+    kept = np.asarray(out["w"])
+    k = int(np.count_nonzero(kept)) or 1
+    rand_energy = np.sort(a ** 2)[:k].sum()
+    assert kept.astype(np.float64) @ kept >= rand_energy * (1 - 1e-5) - 1e-6
+
+
+def test_signsgd_sign_and_scale():
+    g = {"w": jnp.asarray([1.0, -2.0, 3.0, -4.0])}
+    out, bits = signsgd.compress(g)
+    w = np.asarray(out["w"])
+    np.testing.assert_allclose(np.sign(w), np.sign(np.asarray(g["w"])))
+    np.testing.assert_allclose(np.abs(w), 2.5)      # mean |g|
+    assert float(bits) == 4 / 32 + 1
+
+
+def test_atomo_rank_exactness():
+    rng = np.random.RandomState(0)
+    u = rng.randn(16, 2).astype(np.float32)
+    v = rng.randn(2, 8).astype(np.float32)
+    g = {"w": jnp.asarray(u @ v)}                   # exactly rank 2
+    out2, _ = atomo.compress(g, rank=2)
+    np.testing.assert_allclose(np.asarray(out2["w"]), u @ v,
+                               rtol=1e-4, atol=1e-4)
+    out1, _ = atomo.compress(g, rank=1)
+    err1 = np.linalg.norm(np.asarray(out1["w"]) - u @ v)
+    assert err1 > 1e-3                              # rank-1 lossy
+
+
+def test_atomo_power_iteration_close_to_svd():
+    rng = np.random.RandomState(1)
+    g = {"w": jnp.asarray(rng.randn(32, 16).astype(np.float32))}
+    svd_out, _ = atomo.compress(g, rank=4, method="svd")
+    pow_out, _ = atomo.compress(g, rank=4, method="power",
+                                key=jax.random.PRNGKey(0))
+    e_svd = np.linalg.norm(np.asarray(svd_out["w"]) - np.asarray(g["w"]))
+    e_pow = np.linalg.norm(np.asarray(pow_out["w"]) - np.asarray(g["w"]))
+    assert e_pow <= 1.5 * e_svd + 1e-3
+
+
+def test_error_feedback_telescopes():
+    """EF invariant: sum_t compressed_t = sum_t g_t - residual_T."""
+    rng = np.random.RandomState(2)
+    compress = get_compressor("topk", k_frac=0.25)
+    residual = ef.init({"w": jnp.zeros(16)})
+    total_g = np.zeros(16)
+    total_c = np.zeros(16)
+    for t in range(5):
+        g = {"w": jnp.asarray(rng.randn(16).astype(np.float32))}
+        c, residual, _ = ef.apply(compress, g, residual)
+        total_g += np.asarray(g["w"])
+        total_c += np.asarray(c["w"])
+    np.testing.assert_allclose(total_c + np.asarray(residual["w"]), total_g,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_get_compressor_none_identity():
+    g = {"w": jnp.arange(4.0)}
+    out, cost = get_compressor("none")(g)
+    np.testing.assert_allclose(out["w"], g["w"])
+    assert float(cost) == 4.0

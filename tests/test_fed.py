@@ -1,0 +1,97 @@
+"""FL runtime end-to-end: learning, savings, sampling, plug-and-play, and the
+delta->0 equivalence with vanilla FL (paper takeaway 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.synthetic import mixture_classification
+from repro.fed import FLConfig, FLSystem, partition_iid, partition_label_skew
+from repro.models.smallnets import apply_fcn, classifier_loss, init_fcn
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("paper-fcn")
+    key = jax.random.PRNGKey(0)
+    params, _ = init_fcn(key, cfg)
+    x, y = mixture_classification(1200, 10, seed=0)
+    loss_fn = lambda p, b: classifier_loss(apply_fcn, p, cfg, b["x"], b["y"])
+    return cfg, params, x, y, loss_fn
+
+
+def _make(setup, parts_fn, **flkw):
+    cfg, params, x, y, loss_fn = setup
+    K = flkw.pop("num_clients", 10)
+    parts = parts_fn(y, K)
+    data = [{"x": x[p], "y": y[p]} for p in parts]
+    fl = FLSystem(loss_fn, params, data,
+                  FLConfig(num_clients=K, tau=2, lr=0.05, batch_size=16,
+                           **flkw))
+    return fl
+
+
+def _skew(y, k):
+    return partition_label_skew(y, k, 3, seed=0)
+
+
+def _iid(y, k):
+    return partition_iid(len(y), k, seed=0)
+
+
+def test_lbgm_learns_and_saves(setup):
+    fl = _make(setup, _skew, use_lbgm=True, delta_threshold=0.2)
+    hist = fl.run(15)
+    assert hist[-1]["loss"] < hist[0]["loss"] * 0.7
+    assert hist[-1]["savings"] > 0.1
+    assert 0.0 < hist[-1]["frac_scalar"] <= 1.0
+
+
+def test_delta_zero_equals_vanilla(setup):
+    """delta=0 forces full rounds every time => identical trajectory to
+    vanilla FL (paper takeaway 1: recovering the vanilla-FL bound)."""
+    fl_lbgm = _make(setup, _iid, use_lbgm=True, delta_threshold=-1.0)
+    fl_van = _make(setup, _iid, use_lbgm=False)
+    h1 = fl_lbgm.run(4)
+    h2 = fl_van.run(4)
+    for k in fl_lbgm.params:
+        np.testing.assert_allclose(np.asarray(fl_lbgm.params[k]),
+                                   np.asarray(fl_van.params[k]),
+                                   rtol=1e-5, atol=1e-6)
+    assert all(h["frac_scalar"] == 0.0 for h in h1)
+
+
+def test_client_sampling(setup):
+    fl = _make(setup, _skew, use_lbgm=True, sample_frac=0.5)
+    hist = fl.run(10)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    # vanilla baseline accounting counts only sampled clients
+    assert fl.vanilla_uplink < 10 * 10 * 1e9
+
+
+@pytest.mark.parametrize("compressor,kw", [
+    ("topk", {"k_frac": 0.1}),
+    ("signsgd", {}),
+    ("atomo", {"rank": 2}),
+])
+def test_plug_and_play(setup, compressor, kw):
+    """LBGM stacked on top-K / ATOMO / SignSGD (paper P3/P4)."""
+    fl = _make(setup, _iid, use_lbgm=True, delta_threshold=0.3,
+               compressor=compressor, compressor_kw=kw)
+    hist = fl.run(8)
+    assert np.isfinite(hist[-1]["loss"])
+    assert hist[-1]["loss"] < hist[0]["loss"] * 1.05
+    base = _make(setup, _iid, use_lbgm=False, compressor=compressor,
+                 compressor_kw=kw)
+    bh = base.run(8)
+    # LBGM adds savings on top of the base compressor
+    assert fl.total_uplink <= base.total_uplink
+
+
+def test_noniid_partition_properties():
+    _, y = mixture_classification(500, 10, seed=1)
+    parts = partition_label_skew(y, 8, 3, seed=0)
+    assert len(parts) == 8
+    for p in parts:
+        assert len(set(y[p])) <= 3 and len(p) > 0

@@ -1,0 +1,73 @@
+"""Pallas kernel sweeps vs ref.py oracles (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n", [17, 1000, 65536, 200_001])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lbgm_projection_sweep(key, n, dtype):
+    g = (jax.random.normal(key, (n,)) * 0.1).astype(dtype)
+    l = (jax.random.normal(jax.random.fold_in(key, 1), (n,)) * 0.1
+         ).astype(dtype)
+    got = ops.lbgm_projection({"x": g}, {"x": l}, interpret=True)
+    want = ref.lbgm_projection_ref(g, l)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-3 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_lbgm_projection_pytree(key):
+    g = {"a": jax.random.normal(key, (100,)),
+         "b": jax.random.normal(jax.random.fold_in(key, 1), (3, 7))}
+    l = jax.tree.map(lambda x: x * 0.5, g)
+    gl, gg, ll = ops.lbgm_projection(g, l, interpret=True)
+    from repro.core.tree_math import tree_sq_norm, tree_vdot
+    np.testing.assert_allclose(float(gl), float(tree_vdot(g, l)), rtol=1e-4)
+    np.testing.assert_allclose(float(gg), float(tree_sq_norm(g)), rtol=1e-4)
+    np.testing.assert_allclose(float(ll), float(tree_sq_norm(l)), rtol=1e-4)
+
+
+@pytest.mark.parametrize("tq,tk", [(128, 128), (256, 256), (128, 384)])
+@pytest.mark.parametrize("window", [None, 100])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(key, tq, tk, window, dtype):
+    B, Hq, Hkv, hd = 1, 2, 1, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, tq, Hq, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, tk, Hkv, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, tk, Hkv, hd)).astype(dtype)
+    got = ops.flash_attention(q, k, v, causal=True, window=window,
+                              interpret=True)
+    g = Hq // Hkv
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(
+        B * Hq, tk, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(
+        B * Hq, tk, hd)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, tq, hd)
+    want = ref.flash_attention_ref(qf, kf, vf, causal=True, window=window)
+    want = want.reshape(B, Hq, tq, hd).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("t", [64, 256])
+@pytest.mark.parametrize("hd", [32, 64])
+def test_rwkv6_scan_sweep(key, t, hd):
+    B, H = 1, 2
+    ks = jax.random.split(key, 5)
+    r, k, v = (jax.random.normal(ks[i], (B, t, H, hd)) * 0.5
+               for i in range(3))
+    logw = -0.7 * jax.nn.sigmoid(jax.random.normal(ks[3], (B, t, H, hd)))
+    u = jax.random.normal(ks[4], (H, hd)) * 0.5
+    got = ops.rwkv6_scan(r, k, v, logw, u, interpret=True)
+    flat = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, t, hd)
+    uf = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, hd)
+    want = ref.rwkv6_scan_ref(flat(r), flat(k), flat(v), flat(logw), uf)
+    want = want.reshape(B, H, t, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)

@@ -1,0 +1,168 @@
+"""Unit + hypothesis property tests for the LBGM core (paper Algorithm 1)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis.extra.numpy import arrays
+
+from repro.core.lbgm import (corollary1_threshold, init_topk_lbg, leaf_topk,
+                             lbgm_client_step, lbgm_stats,
+                             lbgm_topk_client_step, topk_count)
+from repro.core.tree_math import tree_sq_norm, tree_vdot
+
+FLOATS = st.floats(-10, 10, allow_nan=False, width=32)
+
+
+def vecs(n=16):
+    return arrays(np.float32, (n,), elements=FLOATS)
+
+
+def as_tree(a):
+    return {"w": jnp.asarray(a[: len(a) // 2]), "b": jnp.asarray(a[len(a) // 2:])}
+
+
+# ------------------------------------------------------------ exact algebra
+
+def test_parallel_gradient_exact_reconstruction():
+    """sin^2 = 0 when g = c*lbg => reconstruction rho*lbg == g exactly."""
+    lbg = {"w": jnp.arange(1.0, 9.0), "b": jnp.ones((4,))}
+    g = jax.tree.map(lambda x: 2.5 * x, lbg)
+    sin2, rho, _ = lbgm_stats(g, lbg)
+    assert sin2 < 1e-6
+    assert abs(rho - 2.5) < 1e-6
+    gt, new_lbg, stats = lbgm_client_step(g, lbg, delta_threshold=0.01)
+    assert bool(stats.sent_scalar)
+    for k in g:
+        np.testing.assert_allclose(gt[k], g[k], rtol=1e-6)
+        np.testing.assert_allclose(new_lbg[k], lbg[k])  # LBG unchanged
+
+
+def test_orthogonal_gradient_full_round():
+    g = {"w": jnp.array([1.0, 0.0])}
+    lbg = {"w": jnp.array([0.0, 1.0])}
+    sin2, rho, _ = lbgm_stats(g, lbg)
+    assert abs(sin2 - 1.0) < 1e-6 and abs(rho) < 1e-6
+    gt, new_lbg, stats = lbgm_client_step(g, lbg, 0.5)
+    assert not bool(stats.sent_scalar)
+    np.testing.assert_allclose(gt["w"], g["w"])       # full gradient sent
+    np.testing.assert_allclose(new_lbg["w"], g["w"])  # LBG refreshed
+
+
+def test_zero_lbg_forces_full_round():
+    """Degenerate LBG (round 0) must force a full transmission."""
+    g = {"w": jnp.array([1.0, 2.0])}
+    lbg = {"w": jnp.zeros(2)}
+    sin2, _, _ = lbgm_stats(g, lbg)
+    assert sin2 == 1.0
+    _, new_lbg, stats = lbgm_client_step(g, lbg, 0.99)
+    assert not bool(stats.sent_scalar)
+    np.testing.assert_allclose(new_lbg["w"], g["w"])
+
+
+@settings(max_examples=50, deadline=None)
+@given(vecs(), vecs())
+def test_sin2_in_unit_interval(a, b):
+    sin2, _, _ = lbgm_stats(as_tree(a), as_tree(b))
+    assert -1e-5 <= float(sin2) <= 1.0 + 1e-5
+
+
+@settings(max_examples=50, deadline=None)
+@given(vecs(), vecs(), st.floats(0.0625, 16, width=32))
+def test_rho_scale_equivariance(a, b, c):
+    """Scaling the gradient scales the LBC; sin^2 is scale invariant."""
+    hypothesis.assume(np.linalg.norm(a) > 1e-2 and np.linalg.norm(b) > 1e-2)
+    g, lbg = as_tree(a), as_tree(b)
+    g2 = jax.tree.map(lambda x: c * x, g)
+    s1, r1, _ = lbgm_stats(g, lbg)
+    s2, r2, _ = lbgm_stats(g2, lbg)
+    np.testing.assert_allclose(float(s1), float(s2), atol=1e-4)
+    np.testing.assert_allclose(float(r2), c * float(r1),
+                               rtol=2e-3, atol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(vecs(), vecs(), st.floats(0.0, 1.0, width=32))
+def test_reconstruction_error_bounded_by_lbp(a, b, delta):
+    """Theorem-1 geometry: ||g - rho*lbg||^2 = ||g||^2 sin^2(alpha)."""
+    hypothesis.assume(np.linalg.norm(a) > 1e-2 and np.linalg.norm(b) > 1e-2)
+    g, lbg = as_tree(a), as_tree(b)
+    sin2, rho, gg = lbgm_stats(g, lbg)
+    approx = jax.tree.map(lambda x: rho * x, lbg)
+    err = tree_sq_norm(jax.tree.map(lambda x, y: x - y, g, approx))
+    np.testing.assert_allclose(float(err), float(gg * sin2),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_delta_one_always_scalar_after_init():
+    g = {"w": jnp.array([3.0, -1.0])}
+    lbg = {"w": jnp.array([1.0, 1.0])}
+    _, _, stats = lbgm_client_step(g, lbg, delta_threshold=1.0)
+    assert bool(stats.sent_scalar)
+
+
+def test_uplink_accounting():
+    g = {"w": jnp.ones((10,)), "b": jnp.ones((6,))}
+    lbg = jax.tree.map(jnp.zeros_like, g)
+    _, lbg, s0 = lbgm_client_step(g, lbg, 1.0)
+    assert float(s0.uplink_floats) == 16.0          # full round: M floats
+    _, _, s1 = lbgm_client_step(g, lbg, 1.0)
+    assert float(s1.uplink_floats) == 1.0           # scalar round
+
+
+# ------------------------------------------------------------ topk variant
+
+def test_leaf_topk_selects_largest():
+    g = jnp.asarray(np.random.RandomState(0).randn(1000).astype(np.float32))
+    sp = leaf_topk(g, 0.01)              # single block: global top-k
+    val = np.asarray(sp["val"]).reshape(-1)
+    k = val.size
+    thresh = np.sort(np.abs(np.asarray(g)))[-k]
+    assert np.all(np.abs(val) >= thresh - 1e-6)
+    np.testing.assert_allclose(np.asarray(g)[np.asarray(sp["idx"]).reshape(-1)],
+                               val)
+
+
+def test_blockwise_topk_large_leaf_roundtrip():
+    from repro.core.lbgm import leaf_scatter, leaf_sparse_gather
+    n = 200_000  # > BLOCK => blockwise path, nb rounded to multiple of 16
+    g = jnp.asarray(np.random.RandomState(1).randn(n).astype(np.float32))
+    sp = leaf_topk(g, 0.01)
+    nb, kb = sp["idx"].shape
+    assert nb % 16 == 0
+    assert topk_count(n, 0.01) == nb * kb
+    dense = np.asarray(leaf_scatter(sp, (n,), n, 0.01))
+    nz = np.nonzero(dense)[0]
+    np.testing.assert_allclose(dense[nz], np.asarray(g)[nz])
+    back = leaf_sparse_gather(g, sp, 0.01)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(sp["val"]))
+
+
+def test_topk_lbgm_parallel_scalar_round():
+    rng = np.random.RandomState(0)
+    g = {"w": jnp.asarray(rng.randn(64, 8).astype(np.float32))}
+    lbg = init_topk_lbg(g, k_frac=0.25)
+    # round 1: zero LBG -> full round, LBG refreshed with topk(g)
+    gt, lbg, s = lbgm_topk_client_step(g, lbg, 0.2, 0.25)
+    assert not bool(s.sent_scalar)
+    # round 2: same gradient scaled -> the sparse LBG is parallel to
+    # the *sparsified* g, and the dense/sparse cos^2 is high
+    g2 = jax.tree.map(lambda x: 1.7 * x, g)
+    gt2, lbg2, s2 = lbgm_topk_client_step(g2, lbg, 0.7, 0.25)
+    assert bool(s2.sent_scalar)
+    assert float(s2.uplink_floats) == 1.0
+    # reconstruction = rho * dense(lbg)
+    from repro.core.lbgm import leaf_scatter
+    dense_lbg = np.asarray(leaf_scatter(lbg["w"], (64 * 8,), 64 * 8, 0.25))
+    np.testing.assert_allclose(
+        np.asarray(gt2["w"]).reshape(-1),
+        float(s2.rho) * dense_lbg, rtol=1e-4, atol=1e-5)
+
+
+def test_corollary1_threshold_monotone():
+    t1 = corollary1_threshold(jnp.asarray(1.0), tau=2, total_rounds=100)
+    t2 = corollary1_threshold(jnp.asarray(100.0), tau=2, total_rounds=100)
+    assert float(t1) > float(t2)  # larger gradients => tighter threshold
+    assert 0.0 <= float(t2) <= 1.0

@@ -1,0 +1,84 @@
+"""RWKV6 + RG-LRU: chunked/parallel forms vs sequential oracles, and
+train->decode state continuity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.kernels.ref import rwkv6_scan_ref
+from repro.models.rglru import _rglru_scan, apply_rglru, init_rglru
+from repro.models.rwkv6 import apply_rwkv6, chunked_wkv, init_rwkv6
+from repro.models.common import ParamStore
+
+
+def test_chunked_wkv_matches_stepwise_oracle(key):
+    B, T, H, hd = 2, 128, 2, 16
+    ks = jax.random.split(key, 5)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, hd)) * 0.5
+               for i in range(3))
+    logw = -0.8 * jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, hd)))
+    u = jax.random.normal(ks[4], (H, hd)) * 0.5
+    out, S = chunked_wkv(r, k, v, logw, u, chunk=32)
+    flat = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    uf = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, hd)
+    ref = rwkv6_scan_ref(flat(r), flat(k), flat(v), flat(logw), uf)
+    ref = ref.reshape(B, H, T, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_rwkv6_decode_continues_train_state(key):
+    """Full-sequence apply == prefix apply + per-token decode steps."""
+    cfg = get_config("rwkv6-3b").reduced()
+    store = ParamStore(key, jnp.float32)
+    init_rwkv6(store, "m", cfg)
+    p = {k[len("m/"):]: v for k, v in store.params.items()}
+    B, T, d = 1, 16, cfg.d_model
+    x = jax.random.normal(jax.random.fold_in(key, 7), (B, T, d)) * 0.3
+
+    full, _ = apply_rwkv6(p, x, cfg)
+    half, (S, last) = apply_rwkv6(p, x[:, :8], cfg)
+    outs = [half]
+    state, prev = S, last
+    for t in range(8, T):
+        o, (state, prev) = apply_rwkv6(p, x[:, t:t + 1], cfg,
+                                       state=state, shifted=prev)
+        outs.append(o)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(seq), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rglru_scan_matches_sequential(key):
+    B, T, d = 2, 64, 8
+    a = jax.nn.sigmoid(jax.random.normal(key, (B, T, d)))
+    bx = jax.random.normal(jax.random.fold_in(key, 1), (B, T, d))
+    h = _rglru_scan(a, bx)
+    ref = np.zeros((B, T, d), np.float32)
+    hp = np.zeros((B, d), np.float32)
+    an, bn = np.asarray(a), np.asarray(bx)
+    for t in range(T):
+        hp = an[:, t] * hp + bn[:, t]
+        ref[:, t] = hp
+    np.testing.assert_allclose(np.asarray(h), ref, rtol=1e-4, atol=1e-4)
+
+
+def test_rglru_decode_continues_train_state(key):
+    cfg = get_config("recurrentgemma-2b").reduced()
+    store = ParamStore(key, jnp.float32)
+    init_rglru(store, "m", cfg)
+    p = {k[len("m/"):]: v for k, v in store.params.items()}
+    B, T, d = 1, 12, cfg.d_model
+    x = jax.random.normal(jax.random.fold_in(key, 3), (B, T, d)) * 0.3
+    full, _ = apply_rglru(p, x, cfg)
+    half, (h, conv) = apply_rglru(p, x[:, :6], cfg)
+    outs = [half]
+    for t in range(6, T):
+        o, (h, conv) = apply_rglru(p, x[:, t:t + 1], cfg,
+                                   state=h, conv_state=conv)
+        outs.append(o)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(seq), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,95 @@
+"""Distributed trainer: both dp modes, LBGM-off equivalence, tau>1 ASG."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import LBGMConfig
+from repro.train import trainer as tr
+
+
+def _cfg(mode="replicated", variant="full", tau=1):
+    cfg = get_config("qwen3-1.7b").reduced()
+    return dataclasses.replace(
+        cfg, dp_mode=mode,
+        lbgm=LBGMConfig(variant=variant, delta_threshold=0.2, k_frac=0.1,
+                        num_clients=4, local_steps=tau))
+
+
+def _batch(key, cfg, K, b=2, T=32, tau=1):
+    lead = (K, tau, b) if tau > 1 else (K, b)
+    toks = jax.random.randint(key, lead + (T,), 0, cfg.vocab_size)
+    return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=-1)}
+
+
+def test_force_full_rounds_matches_no_lbgm(key):
+    """delta<0 => every round is a full-gradient round => identical params
+    to the LBGM-off baseline (paper takeaway 1 at trainer level)."""
+    cfg = _cfg()
+    K = 4
+    batch = _batch(key, cfg, K)
+    s_l, _ = tr.init_train_state(key, cfg, K, use_lbgm=True)
+    s_v, _ = tr.init_train_state(key, cfg, K, use_lbgm=False)
+    step_l = jax.jit(tr.make_train_step(cfg, K, 0.01, delta=-1.0))
+    step_v = jax.jit(tr.make_train_step(cfg, K, 0.01, use_lbgm=False))
+    for _ in range(3):
+        s_l, m_l = step_l(s_l, batch)
+        s_v, m_v = step_v(s_v, batch)
+    assert float(m_l["frac_scalar"]) == 0.0
+    for k in s_v["params"]:
+        np.testing.assert_allclose(np.asarray(s_l["params"][k]),
+                                   np.asarray(s_v["params"][k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_scalar_rounds_kick_in(key):
+    cfg = _cfg()
+    K = 4
+    batch = _batch(key, cfg, K)
+    state, _ = tr.init_train_state(key, cfg, K)
+    step = jax.jit(tr.make_train_step(cfg, K, 0.005))
+    state, m0 = step(state, batch)
+    assert float(m0["frac_scalar"]) == 0.0          # LBG init round
+    state, m1 = step(state, batch)                  # same batch: tiny sin^2
+    assert float(m1["frac_scalar"]) > 0.5
+    assert float(m1["uplink_floats"]) < float(m0["uplink_floats"]) / 100
+
+
+def test_fsdp_scan_clients(key):
+    cfg = _cfg(mode="fsdp", variant="topk")
+    K = 4
+    batch = _batch(key, cfg, K)
+    state, _ = tr.init_train_state(key, cfg, K)
+    step = jax.jit(tr.make_train_step(cfg, K, 0.01))
+    s1, m1 = step(state, batch)
+    s2, m2 = step(s1, batch)
+    assert float(m2["loss"]) < float(m1["loss"])
+    assert np.isfinite(float(m2["mean_sin2"]))
+
+
+def test_tau_local_steps_asg(key):
+    """tau>1 replicated mode runs local SGD and aggregates the ASG."""
+    cfg = _cfg(tau=3)
+    K = 2
+    batch = _batch(key, cfg, K, tau=3)
+    state, _ = tr.init_train_state(key, cfg, K)
+    step = jax.jit(tr.make_train_step(cfg, K, 0.01))
+    s1, m = step(state, batch)
+    assert bool(jnp.isfinite(m["loss"]))
+    moved = any(bool(jnp.any(s1["params"][k] != state["params"][k]))
+                for k in state["params"])
+    assert moved
+
+
+def test_effective_clients_divisibility():
+    from repro.launch.mesh import make_debug_mesh
+    mesh = make_debug_mesh(1, 1)
+    cfg = _cfg()
+    k = tr.effective_clients(cfg, mesh, 256)
+    assert 256 % k == 0 and k >= 1
+    cfg_f = _cfg(mode="fsdp")
+    k2 = tr.effective_clients(cfg_f, mesh, 256)
+    assert 256 % k2 == 0 and 1 <= k2 <= cfg_f.lbgm.num_clients
