@@ -10,10 +10,14 @@ import numpy as np
 
 def build_fl(num_clients=20, tau=2, lr=0.05, batch_size=16, seed=0,
              noniid=True, n_data=2000, **flkw):
-    """Paper-style FL system: FCN classifier on synthetic mixture data."""
+    """Paper-style FL engine: FCN classifier on synthetic mixture data.
+
+    Extra **flkw go straight into FLConfig — e.g. scheduler="chunked",
+    chunk_size=32 for the memory-bounded large-cohort path.
+    """
     from repro.configs import get_config
     from repro.data.synthetic import mixture_classification
-    from repro.fed import FLConfig, FLSystem, partition_iid, \
+    from repro.fed import FLConfig, FLEngine, partition_iid, \
         partition_label_skew
     from repro.models.smallnets import apply_fcn, classifier_loss, init_fcn
 
@@ -27,7 +31,7 @@ def build_fl(num_clients=20, tau=2, lr=0.05, batch_size=16, seed=0,
              else partition_iid(len(y), num_clients, seed=seed))
     data = [{"x": x[p], "y": y[p]} for p in parts]
     loss_fn = lambda p, b: classifier_loss(apply_fcn, p, cfg, b["x"], b["y"])
-    fl = FLSystem(loss_fn, params, data,
+    fl = FLEngine(loss_fn, params, data,
                   FLConfig(num_clients=num_clients, tau=tau, lr=lr,
                            batch_size=batch_size, seed=seed, **flkw))
 

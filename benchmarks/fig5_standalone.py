@@ -5,12 +5,16 @@ from __future__ import annotations
 from benchmarks.common import build_fl, emit, timed_rounds
 
 
-def run(rounds=40, delta=0.2):
-    fl_v, ev = build_fl(use_lbgm=False, noniid=True)
+def run(rounds=40, delta=0.2, scheduler="vmap", chunk_size=16):
+    """scheduler/chunk_size select the engine's client-scheduling path:
+    "chunked" bounds transient memory to O(chunk_size·M) for large K."""
+    fl_v, ev = build_fl(use_lbgm=False, noniid=True, scheduler=scheduler,
+                        chunk_size=chunk_size)
     us_v = timed_rounds(fl_v, rounds)
     acc_v = ev(fl_v.params)["test_acc"]
 
-    fl_l, ev = build_fl(use_lbgm=True, delta_threshold=delta, noniid=True)
+    fl_l, ev = build_fl(use_lbgm=True, delta_threshold=delta, noniid=True,
+                        scheduler=scheduler, chunk_size=chunk_size)
     us_l = timed_rounds(fl_l, rounds)
     acc_l = ev(fl_l.params)["test_acc"]
     savings = 1 - fl_l.total_uplink / fl_v.total_uplink

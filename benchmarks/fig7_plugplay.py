@@ -5,7 +5,7 @@ from __future__ import annotations
 from benchmarks.common import build_fl, emit, timed_rounds
 
 
-def run(rounds=30):
+def run(rounds=30, scheduler="vmap"):
     """Three stacks: top-K+EF (error feedback churns the sent support, so
     consecutive compressed gradients barely overlap — LBGM degrades
     *gracefully* to the base compressor, mirroring the paper's own 2/24
@@ -20,13 +20,14 @@ def run(rounds=30):
     for tag, comp, kw, use_ef, delta in settings:
         base, ev = build_fl(use_lbgm=False, compressor=comp,
                             compressor_kw=kw, error_feedback=use_ef,
-                            noniid=True)
+                            noniid=True, scheduler=scheduler)
         us_b = timed_rounds(base, rounds)
         acc_b = ev(base.params)["test_acc"]
 
         fl, ev = build_fl(use_lbgm=True, delta_threshold=delta,
                           compressor=comp, compressor_kw=kw,
-                          error_feedback=use_ef, noniid=True)
+                          error_feedback=use_ef, noniid=True,
+                          scheduler=scheduler)
         us_l = timed_rounds(fl, rounds)
         acc_l = ev(fl.params)["test_acc"]
         extra = 1 - fl.total_uplink / base.total_uplink

@@ -5,16 +5,17 @@ from __future__ import annotations
 from benchmarks.common import build_fl, emit, timed_rounds
 
 
-def run(rounds=30):
+def run(rounds=30, scheduler="vmap"):
     base, ev = build_fl(use_lbgm=False, compressor="signsgd", noniid=False,
-                        tau=1)
+                        tau=1, scheduler=scheduler)
     us_b = timed_rounds(base, rounds)
     acc_b = ev(base.params)["test_acc"]
 
     # sign-compressed gradients agree on a fraction p of coordinates =>
     # cos ~ (2p-1); threshold tuned accordingly (paper App. C.2)
     fl, ev = build_fl(use_lbgm=True, delta_threshold=0.7,
-                      compressor="signsgd", noniid=False, tau=1)
+                      compressor="signsgd", noniid=False, tau=1,
+                      scheduler=scheduler)
     us_l = timed_rounds(fl, rounds)
     acc_l = ev(fl.params)["test_acc"]
     extra = 1 - fl.total_uplink / base.total_uplink

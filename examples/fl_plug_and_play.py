@@ -8,23 +8,26 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.data.synthetic import mixture_classification
-from repro.fed import FLConfig, FLSystem, partition_label_skew
+from repro.fed import FLConfig, FLEngine, partition_label_skew
 from repro.models.smallnets import apply_fcn, classifier_loss, init_fcn
 
 
-def build(use_lbgm: bool):
+def build(use_lbgm: bool, scheduler: str = "chunked"):
     cfg = get_config("paper-fcn")
     params, _ = init_fcn(jax.random.PRNGKey(0), cfg)
     x, y = mixture_classification(2000, 10)
     parts = partition_label_skew(y, 20, 3)
     data = [{"x": x[p], "y": y[p]} for p in parts]
     loss_fn = lambda p, b: classifier_loss(apply_fcn, p, cfg, b["x"], b["y"])
-    return FLSystem(loss_fn, params, data,
+    # chunked scheduler: lax.scan over blocks of 10 clients bounds the
+    # round's working set to O(10·M) instead of O(20·M) — same numbers
+    return FLEngine(loss_fn, params, data,
                     FLConfig(num_clients=20, tau=2, lr=0.05,
                              use_lbgm=use_lbgm, delta_threshold=0.2,
                              compressor="topk",
                              compressor_kw={"k_frac": 0.1},
-                             error_feedback=True))
+                             error_feedback=True,
+                             scheduler=scheduler, chunk_size=10))
 
 
 def main():

@@ -18,3 +18,27 @@ def get_compressor(name: str, **kw):
         method = kw.get("method", "svd")
         return lambda g: atomo.compress(g, rank, method)
     raise ValueError(name)
+
+
+def make_uplink_pipeline(name: str = "none", kw=None,
+                         use_error_feedback=None):
+    """Single hook composing base compressor + error feedback.
+
+    Returns ``(fn, uses_residual)`` where
+    ``fn(grads, residual) -> (grads', residual', uplink_float_cost)``.
+    The residual argument is threaded through untouched (and ignored) when
+    error feedback is off, so callers can keep one static call signature.
+    Default EF policy follows the paper: on iff the base compressor is top-K.
+    """
+    use_ef = (use_error_feedback if use_error_feedback is not None
+              else name == "topk")
+    use_ef = bool(use_ef) and name != "none"
+    compress = get_compressor(name, **(kw or {}))
+    if use_ef:
+        def fn(grads, residual):
+            return error_feedback.apply(compress, grads, residual)
+    else:
+        def fn(grads, residual):
+            out, cost = compress(grads)
+            return out, residual, cost
+    return fn, use_ef

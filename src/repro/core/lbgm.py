@@ -141,11 +141,18 @@ def init_topk_lbg(params_like, k_frac: float) -> Dict[str, Dict[str, jax.Array]]
     return out
 
 
-def lbgm_topk_client_step(grad: Dict[str, jax.Array], lbg, delta_threshold,
-                          k_frac: float):
-    """LBGM stacked on top-K with sparse LBG storage.
+def topk_step_core(grad: Dict[str, jax.Array], lbg, delta_threshold,
+                   k_frac: float, *, corr=None, psum_axes=None,
+                   out_dtypes=False):
+    """Shared body of the sparse-LBG Algorithm-1 step.
 
     grad: flat dict of dense leaves. lbg: flat dict of {idx, val}.
+    corr: optional per-leaf replication-correction weights (each partial
+    scalar is divided by corr[name] before reduction) and psum_axes the mesh
+    axes to ``psum`` the three partial scalars over — both only used by the
+    shard_map variant (repro.core.lbgm_sharded), which calls this on
+    device-local shards. out_dtypes=True scatters g_tilde in each leaf's own
+    dtype instead of fp32.
     """
     # projection stats: dense g against sparse lbg
     gl = jnp.zeros((), jnp.float32)
@@ -154,10 +161,15 @@ def lbgm_topk_client_step(grad: Dict[str, jax.Array], lbg, delta_threshold,
     for name, g in grad.items():
         sl = lbg[name]
         gv = leaf_sparse_gather(g, sl, k_frac)
-        gl += jnp.vdot(gv, sl["val"])
-        ll += jnp.vdot(sl["val"], sl["val"])
+        c = 1.0 if corr is None else 1.0 / corr[name]
+        gl += c * jnp.vdot(gv, sl["val"])
+        ll += c * jnp.vdot(sl["val"], sl["val"])
         flat = g.reshape(-1).astype(jnp.float32)
-        gg += jnp.vdot(flat, flat)
+        gg += c * jnp.vdot(flat, flat)
+    if psum_axes is not None:
+        gl = jax.lax.psum(gl, psum_axes)
+        ll = jax.lax.psum(ll, psum_axes)
+        gg = jax.lax.psum(gg, psum_axes)
     cos2 = (gl * gl) / jnp.maximum(gg * ll, EPS)
     sin2 = jnp.where(ll > EPS, 1.0 - cos2, 1.0)
     rho = gl / jnp.maximum(ll, EPS)
@@ -172,7 +184,9 @@ def lbgm_topk_client_step(grad: Dict[str, jax.Array], lbg, delta_threshold,
         # scalar round: rho * dense(lbg); full round: dense(topk(g))
         send = {"idx": jnp.where(scalar, sl["idx"], new["idx"]),
                 "val": jnp.where(scalar, rho * sl["val"], new["val"])}
-        g_tilde[name] = leaf_scatter(send, g.shape, g.size, k_frac)
+        g_tilde[name] = leaf_scatter(
+            send, g.shape, g.size, k_frac,
+            dtype=g.dtype if out_dtypes else jnp.float32)
         new_lbg[name] = {"idx": jnp.where(scalar, sl["idx"], new["idx"]),
                          "val": jnp.where(scalar, sl["val"], new["val"])}
     # full round uplink: k values + k indices ~ 1.5 floats per kept value
@@ -180,6 +194,15 @@ def lbgm_topk_client_step(grad: Dict[str, jax.Array], lbg, delta_threshold,
                       uplink_floats=jnp.where(scalar, 1.0, 1.5 * total_k),
                       grad_sq_norm=gg)
     return g_tilde, new_lbg, stats
+
+
+def lbgm_topk_client_step(grad: Dict[str, jax.Array], lbg, delta_threshold,
+                          k_frac: float):
+    """LBGM stacked on top-K with sparse LBG storage.
+
+    grad: flat dict of dense leaves. lbg: flat dict of {idx, val}.
+    """
+    return topk_step_core(grad, lbg, delta_threshold, k_frac)
 
 
 # --------------------------------------------------- threshold schedules

@@ -22,8 +22,19 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.lbgm import (EPS, LBGMStats, _block_layout, leaf_topk,
-                             leaf_sparse_gather, leaf_scatter)
+from repro.core.lbgm import LBGMStats, _block_layout, topk_step_core
+
+# newer jax promotes shard_map to the top level; on the 0.4.x line it
+# lives in jax.experimental. The replication-check kwarg was also renamed
+# (check_rep -> check_vma) on its own schedule, so detect it by signature.
+import inspect as _inspect
+
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:
+    from jax.experimental.shard_map import shard_map as _shard_map
+_SM_KW = ({"check_vma": False}
+          if "check_vma" in _inspect.signature(_shard_map).parameters
+          else {"check_rep": False})
 
 
 def _spec_axes(spec: P) -> Tuple[str, ...]:
@@ -95,45 +106,12 @@ def make_sharded_topk_step(cfg, mesh: Mesh, gspecs: Dict[str, P],
             for name in gspecs}
 
     def local_fn(grads, lbg):
-        gl = ll = gg = jnp.zeros((), jnp.float32)
-        for name, g in grads.items():
-            sl = lbg[name]
-            gv = leaf_sparse_gather(g, sl, k_frac)
-            c = 1.0 / corr[name]
-            gl += c * jnp.vdot(gv, sl["val"])
-            ll += c * jnp.vdot(sl["val"], sl["val"])
-            flat = g.reshape(-1).astype(jnp.float32)
-            gg += c * jnp.vdot(flat, flat)
-        gl = jax.lax.psum(gl, all_axes)
-        ll = jax.lax.psum(ll, all_axes)
-        gg = jax.lax.psum(gg, all_axes)
-        cos2 = (gl * gl) / jnp.maximum(gg * ll, EPS)
-        sin2 = jnp.where(ll > EPS, 1.0 - cos2, 1.0)
-        rho = gl / jnp.maximum(ll, EPS)
-        scalar = (sin2 <= delta) & (sin2 < 1.0)
-
-        g_tilde, new_lbg = {}, {}
-        total_k = 0
-        for name, g in grads.items():
-            sl = lbg[name]
-            total_k += sl["idx"].size
-            new = leaf_topk(g, k_frac)
-            send = {"idx": jnp.where(scalar, sl["idx"], new["idx"]),
-                    "val": jnp.where(scalar, rho * sl["val"], new["val"])}
-            g_tilde[name] = leaf_scatter(send, g.shape, g.size, k_frac,
-                                         dtype=g.dtype)
-            new_lbg[name] = {"idx": jnp.where(scalar, sl["idx"], new["idx"]),
-                             "val": jnp.where(scalar, sl["val"],
-                                              new["val"])}
-        stats = LBGMStats(sin2=sin2, rho=rho, sent_scalar=scalar,
-                          uplink_floats=jnp.where(scalar, 1.0,
-                                                  1.5 * total_k),
-                          grad_sq_norm=gg)
-        return g_tilde, new_lbg, stats
+        return topk_step_core(grads, lbg, delta, k_frac, corr=corr,
+                              psum_axes=all_axes, out_dtypes=True)
 
     stat_spec = LBGMStats(*([P()] * 5))
-    return jax.shard_map(
+    return _shard_map(
         local_fn, mesh=mesh,
         in_specs=(gspecs, lbg_specs),
         out_specs=(gspecs, lbg_specs, stat_spec),
-        check_vma=False)
+        **_SM_KW)

@@ -1,2 +1,4 @@
+from repro.fed.engine import (DenseLBGStore, FLConfig, FLEngine,  # noqa: F401
+                              NullLBGStore, TopKLBGStore, make_lbg_store)
 from repro.fed.partition import partition_iid, partition_label_skew  # noqa: F401
-from repro.fed.runtime import FLConfig, FLSystem  # noqa: F401
+from repro.fed.runtime import FLSystem  # noqa: F401

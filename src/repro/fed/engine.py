@@ -1,0 +1,426 @@
+"""Unified federated execution engine (paper Algorithms 1 & 3).
+
+``FLEngine`` is the single round-runner behind every FL reproduction in this
+repo (Figs. 5-8 benchmarks, the plug-and-play example, and the legacy
+``FLSystem`` shim in ``repro.fed.runtime``). One jit'd round function is
+assembled from three pluggable pieces:
+
+1. **Client scheduler** — how the K clients' local training is mapped onto
+   the device:
+
+   * ``"vmap"``   — all K clients batched in one ``jax.vmap`` (the original
+     runtime). Peak *transient* memory is O(K·M): every client's tau-step
+     local-SGD working set (activations, gradients, the per-client g_tilde
+     stack) is live at once.
+   * ``"chunked"`` — ``jax.lax.scan`` over blocks of at most ``chunk_size``
+     clients, ``vmap`` only within a block. Peak transient memory is
+     O(chunk·M), which is what unlocks K >> 100 cohorts: the persistent LBG
+     bank still scales with K, but the round working set no longer does.
+     The actual block size is the largest divisor of K not exceeding
+     ``chunk_size`` (never more memory than requested, no wasted compute);
+     when K is near-prime and that divisor would be tiny, the engine keeps
+     ``chunk_size`` and zero-weight pads the last block instead.
+
+   Both schedulers accumulate the server aggregate with the *same* strictly
+   sequential per-client ``lax.scan`` (carry += w_k * g_k, k = 0..K-1), so
+   their float addition order is identical and the two produce bit-for-bit
+   equal params and metrics on the same seed (tested in
+   ``tests/test_engine.py``).
+
+2. **LBGStore** — how each client's look-back gradient is stored and how
+   Algorithm 1's accept/recycle decision is made:
+
+   * ``DenseLBGStore`` — paper-faithful dense pytree bank, one params-shaped
+     LBG per client (wraps ``repro.core.lbgm.lbgm_client_step``).
+   * ``TopKLBGStore`` — sparse (indices, values) bank at ``k_frac`` density
+     (wraps ``lbgm_topk_client_step``); the bank shrinks from O(K·M) to
+     O(K·k_frac·M), the enabling step for large-model cohorts.
+   * ``NullLBGStore`` — vanilla FL (``use_lbgm=False``): gradients pass
+     through, every round is a full round.
+
+   A store implements ``init(params, K)``, ``client_step(grad, lbg_k)`` and
+   ``full_round_cost(base_cost)``; new storage schemes (e.g. quantized or
+   host-offloaded LBGs) plug in by implementing those three methods.
+
+3. **Uplink pipeline** — base compressor + error feedback composed behind
+   ``repro.compression.make_uplink_pipeline`` (top-K / ATOMO / SignSGD,
+   paper P3/P4), applied to the accumulated stochastic gradient before the
+   LBGM decision.
+
+Uplink accounting follows the paper's metric of floating-point parameters
+shared per worker: a scalar (recycle) round uploads exactly 1 float, a full
+round pays the pipeline/store cost.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression import make_uplink_pipeline
+from repro.core import lbgm as lbgm_lib
+from repro.core.tree_math import tree_size, tree_zeros_like
+
+
+@dataclass
+class FLConfig:
+    num_clients: int = 100
+    tau: int = 2                     # local SGD steps per round
+    lr: float = 0.05
+    batch_size: int = 32
+    use_lbgm: bool = True
+    delta_threshold: float = 0.2
+    compressor: str = "none"         # none | topk | atomo | signsgd
+    compressor_kw: Optional[dict] = None
+    error_feedback: Optional[bool] = None   # default: on iff topk
+    sample_frac: float = 1.0         # Algorithm 3 device sampling
+    seed: int = 0
+    scheduler: str = "vmap"          # vmap | chunked
+    chunk_size: int = 16             # max clients per lax.scan block
+    lbg_variant: str = "dense"       # dense | topk  (LBG storage scheme)
+    lbg_kw: Optional[dict] = None    # e.g. {"k_frac": 0.1} for topk
+
+
+# ------------------------------------------------------------- LBG stores
+
+def _null_stats():
+    return lbgm_lib.LBGMStats(
+        sin2=jnp.ones((), jnp.float32), rho=jnp.zeros((), jnp.float32),
+        sent_scalar=jnp.zeros((), bool),
+        uplink_floats=jnp.zeros((), jnp.float32),
+        grad_sq_norm=jnp.zeros((), jnp.float32))
+
+
+class NullLBGStore:
+    """Vanilla FL: no LBG bank, every round is a full round."""
+
+    def init(self, params, num_clients: int):
+        return {}
+
+    def client_step(self, grad, lbg_k):
+        return grad, lbg_k, _null_stats()
+
+    def full_round_cost(self, base_cost, stats):
+        return base_cost
+
+
+class DenseLBGStore:
+    """Paper-faithful Algorithm 1: one dense params-shaped LBG per client."""
+
+    def __init__(self, delta_threshold: float):
+        self.delta = delta_threshold
+
+    def init(self, params, num_clients: int):
+        return jax.tree.map(
+            lambda p: jnp.zeros((num_clients,) + p.shape, p.dtype), params)
+
+    def client_step(self, grad, lbg_k):
+        return lbgm_lib.lbgm_client_step(grad, lbg_k, self.delta)
+
+    def full_round_cost(self, base_cost, stats):
+        # full rounds ship whatever the uplink pipeline produced
+        return base_cost
+
+
+class TopKLBGStore:
+    """Sparse (idx, val) LBG bank at k_frac density (paper App. C.1)."""
+
+    def __init__(self, delta_threshold: float, k_frac: float = 0.1):
+        self.delta = delta_threshold
+        self.k_frac = k_frac
+
+    def init(self, params, num_clients: int):
+        proto = lbgm_lib.init_topk_lbg(params, self.k_frac)
+        return jax.tree.map(
+            lambda x: jnp.zeros((num_clients,) + x.shape, x.dtype), proto)
+
+    def client_step(self, grad, lbg_k):
+        return lbgm_lib.lbgm_topk_client_step(grad, lbg_k, self.delta,
+                                              self.k_frac)
+
+    def full_round_cost(self, base_cost, stats):
+        # the sparse-transmission cost model (values + block-local indices)
+        # lives in core/lbgm.py; reuse its number rather than re-deriving
+        return stats.uplink_floats
+
+
+def make_lbg_store(cfg: FLConfig):
+    if not cfg.use_lbgm:
+        return NullLBGStore()
+    variant = {"full": "dense"}.get(cfg.lbg_variant, cfg.lbg_variant)
+    if variant == "dense":
+        return DenseLBGStore(cfg.delta_threshold)
+    if variant == "topk":
+        return TopKLBGStore(cfg.delta_threshold, **(cfg.lbg_kw or {}))
+    raise ValueError(f"unknown lbg_variant: {cfg.lbg_variant!r}")
+
+
+# ------------------------------------------------------------- schedulers
+
+def pick_chunk(num_clients: int, chunk_size: int) -> int:
+    """Actual scan-block size for the chunked scheduler.
+
+    Prefer the largest divisor of K that fits in chunk_size — same memory
+    bound, zero phantom-client compute. Only when K is so indivisible that
+    the best divisor is under half the requested size (e.g. prime K) do we
+    keep chunk_size and pay for a zero-weight padded tail block instead.
+    """
+    c = min(chunk_size, num_clients)
+    d = max(x for x in range(1, c + 1) if num_clients % x == 0)
+    return d if d >= max(1, c // 2) else c
+
+
+def _seq_weighted_sum(acc, w, gt_stack):
+    """acc + sum_k w[k] * gt_stack[k], accumulated strictly sequentially.
+
+    Shared by both schedulers so the addition order (and therefore the
+    float rounding) is identical regardless of how clients were batched.
+    """
+    def body(a, x):
+        w_k, gt_k = x
+        # the w_k > 0 gate (not just w_k *) keeps zero-weight clients out
+        # even when their gradient is non-finite — phantom pad clients run
+        # the user's loss_fn on all-zero batches, which may produce NaNs
+        # that 0 * NaN would otherwise leak into the aggregate
+        return jax.tree.map(
+            lambda ai, gi: ai + jnp.where(
+                w_k > 0, w_k * gi.astype(jnp.float32), 0.0), a, gt_k), None
+    out, _ = jax.lax.scan(body, acc, (w, gt_stack))
+    return out
+
+
+def _keep_sampled(maskf, new, old):
+    """Unsampled clients keep their previous per-client state."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(
+            maskf.reshape((-1,) + (1,) * (n.ndim - 1)) > 0, n, o), new, old)
+
+
+def _vmap_schedule(client_fn, params, batch, lbg, resid, w, maskf):
+    """All K clients in one vmap; O(K·M) transient working set."""
+    gt, new_lbg, new_res, loss, uplink, scalar = jax.vmap(
+        lambda b, l, r: client_fn(params, b, l, r))(batch, lbg, resid)
+    agg = _seq_weighted_sum(tree_zeros_like(params, jnp.float32), w, gt)
+    return (agg, _keep_sampled(maskf, new_lbg, lbg),
+            _keep_sampled(maskf, new_res, resid), loss, uplink, scalar)
+
+
+def _chunked_schedule(client_fn, params, batch, lbg, resid, w, maskf,
+                      chunk: int):
+    """lax.scan over blocks of `chunk` clients; O(chunk·M) transient set.
+
+    The LBG / residual banks ride in the scan *carry* and are updated
+    in place per chunk via dynamic_update_slice (rather than stacked as
+    scan outputs), so XLA never materializes a second O(K·M) bank buffer.
+    Requires K % chunk == 0 (the engine zero-weight pads beforehand).
+    """
+    K = w.shape[0]
+    n_chunks = K // chunk
+    slice_at = lambda t, i: jax.tree.map(
+        lambda x: jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk), t)
+    update_at = lambda t, u, i: jax.tree.map(
+        lambda x, v: jax.lax.dynamic_update_slice_in_dim(x, v, i * chunk,
+                                                         axis=0), t, u)
+
+    def chunk_body(carry, xs):
+        acc, lbg_bank, res_bank = carry
+        i, b_c, w_c, m_c = xs
+        l_c, r_c = slice_at(lbg_bank, i), slice_at(res_bank, i)
+        gt, nl, nr, loss, uplink, scalar = jax.vmap(
+            lambda b, l, r: client_fn(params, b, l, r))(b_c, l_c, r_c)
+        acc = _seq_weighted_sum(acc, w_c, gt)
+        lbg_bank = update_at(lbg_bank, _keep_sampled(m_c, nl, l_c), i)
+        res_bank = update_at(res_bank, _keep_sampled(m_c, nr, r_c), i)
+        return (acc, lbg_bank, res_bank), (loss, uplink, scalar)
+
+    # batch arrives pre-chunked (n_chunks, chunk, ...) from the host so the
+    # scan reads straight out of the argument buffer (no device-side copy)
+    init = (tree_zeros_like(params, jnp.float32), lbg, resid)
+    (agg, new_lbg, new_res), (loss, uplink, scalar) = jax.lax.scan(
+        chunk_body, init,
+        (jnp.arange(n_chunks), batch, w.reshape(n_chunks, chunk),
+         maskf.reshape(n_chunks, chunk)))
+    return (agg, new_lbg, new_res,
+            loss.reshape(K), uplink.reshape(K), scalar.reshape(K))
+
+
+# ------------------------------------------------------------- engine
+
+class FLEngine:
+    """loss_fn(params, batch_dict) -> (loss, metrics). Data is a list of
+    per-client dicts of numpy arrays (see repro.fed.partition)."""
+
+    def __init__(self, loss_fn: Callable, params: Dict[str, jax.Array],
+                 client_data: List[Dict[str, np.ndarray]], flcfg: FLConfig):
+        self.loss_fn = loss_fn
+        self.cfg = flcfg
+        self.params = params
+        self.client_data = client_data
+        K = flcfg.num_clients
+        assert len(client_data) == K
+        if flcfg.scheduler not in ("vmap", "chunked"):
+            raise ValueError(f"unknown scheduler: {flcfg.scheduler!r}")
+        if flcfg.scheduler == "chunked":
+            if flcfg.chunk_size < 1:
+                raise ValueError(
+                    f"chunk_size must be >= 1, got {flcfg.chunk_size}")
+            # single source of truth for the scan-block layout: both the
+            # device round program and the host batch chunking use these
+            self._chunk = pick_chunk(K, flcfg.chunk_size)
+            self._pad = (-K) % self._chunk
+        else:
+            self._chunk, self._pad = K, 0
+        self.weights = np.array([len(next(iter(d.values())))
+                                 for d in client_data], np.float64)
+        self.weights = jnp.asarray(self.weights / self.weights.sum(),
+                                   jnp.float32)
+        self.store = make_lbg_store(flcfg)
+        # banks are allocated padded to the chunk grid once, up front; the
+        # phantom rows stay zero forever (their mask is always 0), so the
+        # per-round scan updates them in place with no pad/slice copies
+        Kp = K + self._pad
+        self.lbg = self.store.init(params, Kp)
+        self._pipeline, self._use_ef = make_uplink_pipeline(
+            flcfg.compressor, flcfg.compressor_kw, flcfg.error_feedback)
+        self.residual = jax.tree.map(
+            lambda p: jnp.zeros((Kp,) + p.shape, jnp.float32), params) \
+            if self._use_ef else {}
+        # donate the LBG/residual banks: the round's new state reuses the
+        # old banks' buffers instead of allocating a second O(K·M) copy
+        self._round = jax.jit(self._build_round(), donate_argnums=(1, 2))
+        self.total_uplink = 0.0
+        self.vanilla_uplink = 0.0
+        self.history: List[Dict[str, float]] = []
+
+    # -------------------------------------------------------------- build
+    def _build_client_fn(self):
+        cfg = self.cfg
+        loss_fn = self.loss_fn
+        pipeline = self._pipeline
+        store = self.store
+
+        def client_update(params, batches):
+            """tau local steps; batches: dict leaves (tau, b, ...)."""
+            def step(p, bt):
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, bt)
+                p2 = jax.tree.map(
+                    lambda x, gg: x - cfg.lr * gg.astype(x.dtype), p, g)
+                return p2, (g, l)
+            _, (gs, ls) = jax.lax.scan(step, params, batches)
+            asg = jax.tree.map(lambda g: jnp.sum(g, 0), gs)
+            return asg, jnp.mean(ls)
+
+        def client_fn(params, batches, lbg_k, resid_k):
+            asg, loss = client_update(params, batches)
+            asg, resid_k, cost = pipeline(asg, resid_k)
+            gt, lbg_k, stats = store.client_step(asg, lbg_k)
+            # scalar rounds upload 1 float; full rounds pay the base cost
+            uplink = jnp.where(stats.sent_scalar, 1.0,
+                               store.full_round_cost(cost, stats))
+            return gt, lbg_k, resid_k, loss, uplink, stats.sent_scalar
+
+        return client_fn
+
+    def _build_round(self):
+        cfg = self.cfg
+        client_fn = self._build_client_fn()
+        K = cfg.num_clients
+        chunk, pad = self._chunk, self._pad
+
+        def round_fn(params, lbg, residual, batch, mask):
+            """batch leaves: (K, tau, b, ...); mask: (K,) participation.
+            In chunked mode the state banks are permanently padded to the
+            chunk grid (zero-weight phantom clients, always masked out),
+            so only the small per-round vectors need padding here."""
+            maskf = mask.astype(jnp.float32)
+            w = self.weights * maskf
+            w = w / jnp.maximum(jnp.sum(w), 1e-12)
+            if cfg.scheduler == "chunked":
+                if pad:
+                    w_s = jnp.concatenate([w, jnp.zeros(pad, w.dtype)])
+                    m_s = jnp.concatenate([maskf, jnp.zeros(pad,
+                                                            maskf.dtype)])
+                else:
+                    w_s, m_s = w, maskf
+                agg, new_lbg, new_res, losses, uplink, scalar = \
+                    _chunked_schedule(client_fn, params, batch, lbg,
+                                      residual, w_s, m_s, chunk)
+                if pad:
+                    losses, uplink, scalar = (losses[:K], uplink[:K],
+                                              scalar[:K])
+            else:
+                agg, new_lbg, new_res, losses, uplink, scalar = \
+                    _vmap_schedule(client_fn, params, batch, lbg, residual,
+                                   w, maskf)
+            new_params = jax.tree.map(
+                lambda p, a: p - cfg.lr * a.astype(p.dtype), params, agg)
+            metrics = {
+                "loss": jnp.sum(losses * w),
+                "uplink_floats": jnp.sum(uplink * maskf),
+                "frac_scalar": jnp.sum(scalar.astype(jnp.float32) * maskf)
+                / jnp.maximum(jnp.sum(maskf), 1.0),
+            }
+            return new_params, new_lbg, new_res, metrics
+
+        return round_fn
+
+    # -------------------------------------------------------------- data
+    def _sample_batches(self, rng: np.random.RandomState):
+        """Per-round client batches. vmap layout: leaves (K, tau, b, ...);
+        chunked layout: (n_chunks, chunk, tau, b, ...), padded host-side so
+        the device scan consumes the argument buffer directly."""
+        cfg = self.cfg
+        out = None
+        for d in self.client_data:
+            n = len(next(iter(d.values())))
+            idx = rng.randint(0, n, size=(cfg.tau, cfg.batch_size))
+            picked = {k: v[idx] for k, v in d.items()}
+            if out is None:
+                out = {k: [] for k in picked}
+            for k, v in picked.items():
+                out[k].append(v)
+        stacked = {k: np.stack(v) for k, v in out.items()}
+        if cfg.scheduler == "chunked":
+            chunk, pad = self._chunk, self._pad
+            def to_chunks(x):
+                if pad:
+                    x = np.concatenate(
+                        [x, np.zeros((pad,) + x.shape[1:], x.dtype)])
+                return x.reshape((x.shape[0] // chunk, chunk) + x.shape[1:])
+            stacked = {k: to_chunks(v) for k, v in stacked.items()}
+        return {k: jnp.asarray(v) for k, v in stacked.items()}
+
+    # -------------------------------------------------------------- run
+    def run_round(self, rng: np.random.RandomState) -> Dict[str, float]:
+        cfg = self.cfg
+        batch = self._sample_batches(rng)
+        mask = (rng.rand(cfg.num_clients) < cfg.sample_frac) \
+            if cfg.sample_frac < 1.0 else np.ones(cfg.num_clients)
+        if mask.sum() == 0:
+            mask[rng.randint(cfg.num_clients)] = 1
+        self.params, self.lbg, self.residual, metrics = self._round(
+            self.params, self.lbg, self.residual, batch,
+            jnp.asarray(mask, jnp.float32))
+        m = {k: float(v) for k, v in metrics.items()}
+        self.total_uplink += m["uplink_floats"]
+        self.vanilla_uplink += float(mask.sum()) * tree_size(self.params)
+        m["total_uplink"] = self.total_uplink
+        m["vanilla_uplink"] = self.vanilla_uplink
+        m["savings"] = 1.0 - self.total_uplink / max(self.vanilla_uplink, 1.0)
+        self.history.append(m)
+        return m
+
+    def run(self, rounds: int, eval_fn: Optional[Callable] = None,
+            eval_every: int = 10, verbose: bool = False):
+        rng = np.random.RandomState(self.cfg.seed + 1)
+        for r in range(rounds):
+            m = self.run_round(rng)
+            if eval_fn is not None and (r + 1) % eval_every == 0:
+                m.update(eval_fn(self.params))
+            if verbose and (r + 1) % eval_every == 0:
+                print(f"round {r+1:4d} " +
+                      " ".join(f"{k}={v:.4g}" for k, v in m.items()))
+        return self.history

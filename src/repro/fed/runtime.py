@@ -1,191 +1,14 @@
-"""Paper-faithful FL runtime (Algorithms 1 & 3) for the small paper-native
-models — drives the benchmark reproductions of Figs. 5-8.
+"""Back-compat shim — the FL runtime now lives in ``repro.fed.engine``.
 
-100 workers, tau local SGD steps, optional device sampling, optional base
-compressor (top-K / ATOMO / SignSGD) under LBGM (plug-and-play P3/P4), with
-error feedback when top-K is active. Everything is one jit'd round function
-(clients vmapped); uplink accounting follows the paper's metric of
-floating-point parameters shared per worker.
+``FLSystem`` predates the unified engine (pluggable client schedulers +
+LBGStore abstraction); it is kept as a thin alias so existing callers and
+checkpoints of the original all-clients-vmapped runtime keep working.
+New code should construct ``repro.fed.engine.FLEngine`` directly.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.compression import get_compressor
-from repro.compression import error_feedback as ef
-from repro.core import lbgm as lbgm_lib
-from repro.core.tree_math import tree_size, tree_zeros_like
+from repro.fed.engine import FLConfig, FLEngine  # noqa: F401
 
 
-@dataclass
-class FLConfig:
-    num_clients: int = 100
-    tau: int = 2                     # local SGD steps per round
-    lr: float = 0.05
-    batch_size: int = 32
-    use_lbgm: bool = True
-    delta_threshold: float = 0.2
-    compressor: str = "none"         # none | topk | atomo | signsgd
-    compressor_kw: Optional[dict] = None
-    error_feedback: Optional[bool] = None   # default: on iff topk
-    sample_frac: float = 1.0         # Algorithm 3 device sampling
-    seed: int = 0
-
-
-class FLSystem:
-    """loss_fn(params, batch_dict) -> (loss, metrics). Data is a list of
-    per-client dicts of numpy arrays (see repro.fed.partition)."""
-
-    def __init__(self, loss_fn: Callable, params: Dict[str, jax.Array],
-                 client_data: List[Dict[str, np.ndarray]], flcfg: FLConfig):
-        self.loss_fn = loss_fn
-        self.cfg = flcfg
-        self.params = params
-        self.key = jax.random.PRNGKey(flcfg.seed)
-        self.client_data = client_data
-        K = flcfg.num_clients
-        assert len(client_data) == K
-        self.weights = np.array([len(next(iter(d.values())))
-                                 for d in client_data], np.float64)
-        self.weights = jnp.asarray(self.weights / self.weights.sum(),
-                                   jnp.float32)
-        self.lbg = jax.tree.map(
-            lambda p: jnp.zeros((K,) + p.shape, p.dtype), params) \
-            if flcfg.use_lbgm else None
-        use_ef = (flcfg.error_feedback if flcfg.error_feedback is not None
-                  else flcfg.compressor == "topk")
-        self.residual = jax.tree.map(
-            lambda p: jnp.zeros((K,) + p.shape, jnp.float32), params) \
-            if use_ef and flcfg.compressor != "none" else None
-        self._use_ef = self.residual is not None
-        self._round = jax.jit(self._build_round())
-        self.total_uplink = 0.0
-        self.vanilla_uplink = 0.0
-        self.history: List[Dict[str, float]] = []
-
-    # -------------------------------------------------------------- build
-    def _build_round(self):
-        cfg = self.cfg
-        loss_fn = self.loss_fn
-        compress = get_compressor(cfg.compressor, **(cfg.compressor_kw or {}))
-        M = float(tree_size(self.params))
-
-        def client_update(params, batches):
-            """tau local steps; batches: dict leaves (tau, b, ...)."""
-            def step(p, bt):
-                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, bt)
-                p2 = jax.tree.map(
-                    lambda x, gg: x - cfg.lr * gg.astype(x.dtype), p, g)
-                return p2, (g, l)
-            _, (gs, ls) = jax.lax.scan(step, params, batches)
-            asg = jax.tree.map(lambda g: jnp.sum(g, 0), gs)
-            return asg, jnp.mean(ls)
-
-        def one_client(params, batches, lbg_k, resid_k):
-            asg, loss = client_update(params, batches)
-            cost = jnp.asarray(M, jnp.float32)
-            if cfg.compressor != "none":
-                if self._use_ef:
-                    asg, resid_k, cost = ef.apply(compress, asg, resid_k)
-                else:
-                    asg, cost = compress(asg)
-            if cfg.use_lbgm:
-                gt, lbg_k, stats = lbgm_lib.lbgm_client_step(
-                    asg, lbg_k, cfg.delta_threshold)
-                # scalar rounds upload 1 float; full rounds pay the base cost
-                uplink = jnp.where(stats.sent_scalar, 1.0, cost)
-                scalar = stats.sent_scalar
-            else:
-                gt, uplink, scalar = asg, cost, jnp.asarray(False)
-            return gt, lbg_k, resid_k, loss, uplink, scalar
-
-        def round_fn(params, lbg, residual, batch, mask):
-            """batch leaves: (K, tau, b, ...); mask: (K,) participation."""
-            lbg_in = lbg if lbg is not None else tree_zeros_like(params)
-            res_in = residual
-            K = cfg.num_clients
-            if lbg is None:
-                lbg_in = jax.tree.map(
-                    lambda p: jnp.zeros((K,) + p.shape, p.dtype), params)
-            if residual is None:
-                res_in = jax.tree.map(
-                    lambda p: jnp.zeros((K,) + p.shape, jnp.float32), params)
-            gt, new_lbg, new_res, losses, uplink, scalar = jax.vmap(
-                lambda b, l, r: one_client(params, b, l, r))(
-                    batch, lbg_in, res_in)
-            maskf = mask.astype(jnp.float32)
-            w = self.weights * maskf
-            w = w / jnp.maximum(jnp.sum(w), 1e-12)
-            agg = jax.tree.map(
-                lambda g: jnp.einsum("k,k...->...", w,
-                                     g.astype(jnp.float32)), gt)
-            new_params = jax.tree.map(
-                lambda p, a: p - cfg.lr * a.astype(p.dtype), params, agg)
-            # unsampled clients keep their previous LBG / residual
-            keep = lambda new, old: jax.tree.map(
-                lambda n, o: jnp.where(
-                    maskf.reshape((-1,) + (1,) * (n.ndim - 1)) > 0, n, o),
-                new, old)
-            new_lbg = keep(new_lbg, lbg_in)
-            new_res = keep(new_res, res_in)
-            metrics = {
-                "loss": jnp.sum(losses * w),
-                "uplink_floats": jnp.sum(uplink * maskf),
-                "frac_scalar": jnp.sum(scalar.astype(jnp.float32) * maskf)
-                / jnp.maximum(jnp.sum(maskf), 1.0),
-            }
-            return new_params, new_lbg, new_res, metrics
-
-        return round_fn
-
-    # -------------------------------------------------------------- data
-    def _sample_batches(self, rng: np.random.RandomState):
-        cfg = self.cfg
-        out = None
-        for d in self.client_data:
-            n = len(next(iter(d.values())))
-            idx = rng.randint(0, n, size=(cfg.tau, cfg.batch_size))
-            picked = {k: v[idx] for k, v in d.items()}
-            if out is None:
-                out = {k: [] for k in picked}
-            for k, v in picked.items():
-                out[k].append(v)
-        return {k: jnp.asarray(np.stack(v)) for k, v in out.items()}
-
-    # -------------------------------------------------------------- run
-    def run_round(self, rng: np.random.RandomState) -> Dict[str, float]:
-        cfg = self.cfg
-        batch = self._sample_batches(rng)
-        mask = (rng.rand(cfg.num_clients) < cfg.sample_frac) \
-            if cfg.sample_frac < 1.0 else np.ones(cfg.num_clients)
-        if mask.sum() == 0:
-            mask[rng.randint(cfg.num_clients)] = 1
-        self.params, self.lbg, self.residual, metrics = self._round(
-            self.params, self.lbg, self.residual, batch,
-            jnp.asarray(mask, jnp.float32))
-        m = {k: float(v) for k, v in metrics.items()}
-        self.total_uplink += m["uplink_floats"]
-        self.vanilla_uplink += float(mask.sum()) * tree_size(self.params)
-        m["total_uplink"] = self.total_uplink
-        m["vanilla_uplink"] = self.vanilla_uplink
-        m["savings"] = 1.0 - self.total_uplink / max(self.vanilla_uplink, 1.0)
-        self.history.append(m)
-        return m
-
-    def run(self, rounds: int, eval_fn: Optional[Callable] = None,
-            eval_every: int = 10, verbose: bool = False):
-        rng = np.random.RandomState(self.cfg.seed + 1)
-        for r in range(rounds):
-            m = self.run_round(rng)
-            if eval_fn is not None and (r + 1) % eval_every == 0:
-                m.update(eval_fn(self.params))
-            if verbose and (r + 1) % eval_every == 0:
-                print(f"round {r+1:4d} " +
-                      " ".join(f"{k}={v:.4g}" for k, v in m.items()))
-        return self.history
+class FLSystem(FLEngine):
+    """Deprecated alias for :class:`repro.fed.engine.FLEngine`."""

@@ -1,0 +1,24 @@
+"""Hypothesis property tests for compression baselines. Skips wholesale
+when the dev-only `hypothesis` package is absent (requirements-dev.txt);
+deterministic coverage lives in test_compression.py."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+import jax.numpy as jnp  # noqa: E402
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+from hypothesis.extra.numpy import arrays  # noqa: E402
+
+from repro.compression import topk  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(arrays(np.float32, (32,), elements=st.floats(-5, 5, width=32)))
+def test_topk_energy_dominates_random_subset(a):
+    g = {"w": jnp.asarray(a)}
+    out, _ = topk.compress(g, k_frac=0.25)
+    kept = np.asarray(out["w"])
+    k = int(np.count_nonzero(kept)) or 1
+    rand_energy = np.sort(a ** 2)[:k].sum()
+    assert kept.astype(np.float64) @ kept >= rand_energy * (1 - 1e-5) - 1e-6

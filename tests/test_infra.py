@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.analysis.pca import GradientSpaceTracker, cosine_matrix, n_pca
 from repro.analysis.roofline import (RooflineReport, build_report,
@@ -38,7 +38,13 @@ def test_checkpoint_roundtrip(tmp_path):
 
 # ------------------------------------------------------------- sharding
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH = shd.abstract_mesh((16, 16), ("data", "model"))
+
+
+def test_abstract_mesh_roundtrips():
+    assert MESH.axis_names == ("data", "model")
+    assert dict(MESH.shape) == {"data": 16, "model": 16}
+    assert MESH.shape_tuple == (("data", 16), ("model", 16))
 
 
 def test_param_pspec_rules():

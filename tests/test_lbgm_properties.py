@@ -1,0 +1,60 @@
+"""Hypothesis property tests for the LBGM core. Skips wholesale when the
+dev-only `hypothesis` package is absent (requirements-dev.txt); the
+deterministic coverage lives in test_lbgm.py and test_engine.py."""
+import jax
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import jax.numpy as jnp  # noqa: E402
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+from hypothesis.extra.numpy import arrays  # noqa: E402
+
+from repro.core.lbgm import lbgm_stats  # noqa: E402
+from repro.core.tree_math import tree_sq_norm  # noqa: E402
+
+FLOATS = st.floats(-10, 10, allow_nan=False, width=32)
+
+
+def vecs(n=16):
+    return arrays(np.float32, (n,), elements=FLOATS)
+
+
+def as_tree(a):
+    return {"w": jnp.asarray(a[: len(a) // 2]),
+            "b": jnp.asarray(a[len(a) // 2:])}
+
+
+@settings(max_examples=50, deadline=None)
+@given(vecs(), vecs())
+def test_sin2_in_unit_interval(a, b):
+    sin2, _, _ = lbgm_stats(as_tree(a), as_tree(b))
+    assert -1e-5 <= float(sin2) <= 1.0 + 1e-5
+
+
+@settings(max_examples=50, deadline=None)
+@given(vecs(), vecs(), st.floats(0.0625, 16, width=32))
+def test_rho_scale_equivariance(a, b, c):
+    """Scaling the gradient scales the LBC; sin^2 is scale invariant."""
+    hypothesis.assume(np.linalg.norm(a) > 1e-2 and np.linalg.norm(b) > 1e-2)
+    g, lbg = as_tree(a), as_tree(b)
+    g2 = jax.tree.map(lambda x: c * x, g)
+    s1, r1, _ = lbgm_stats(g, lbg)
+    s2, r2, _ = lbgm_stats(g2, lbg)
+    np.testing.assert_allclose(float(s1), float(s2), atol=1e-4)
+    np.testing.assert_allclose(float(r2), c * float(r1),
+                               rtol=2e-3, atol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(vecs(), vecs(), st.floats(0.0, 1.0, width=32))
+def test_reconstruction_error_bounded_by_lbp(a, b, delta):
+    """Theorem-1 geometry: ||g - rho*lbg||^2 = ||g||^2 sin^2(alpha)."""
+    hypothesis.assume(np.linalg.norm(a) > 1e-2 and np.linalg.norm(b) > 1e-2)
+    g, lbg = as_tree(a), as_tree(b)
+    sin2, rho, gg = lbgm_stats(g, lbg)
+    approx = jax.tree.map(lambda x: rho * x, lbg)
+    err = tree_sq_norm(jax.tree.map(lambda x, y: x - y, g, approx))
+    np.testing.assert_allclose(float(err), float(gg * sin2),
+                               rtol=1e-3, atol=1e-3)
