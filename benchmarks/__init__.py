@@ -1,0 +1,16 @@
+"""Benchmark package — runnable as ``python -m benchmarks.run`` from the
+repo root.
+
+The repo's import convention is pytest.ini's ``pythonpath = src``; outside
+pytest nothing puts ``src/`` on ``sys.path``, so this package bootstraps it
+once, centrally, instead of per-script ``sys.path.insert`` hacks.
+"""
+from __future__ import annotations
+
+import importlib.util
+import os
+import sys
+
+if importlib.util.find_spec("repro") is None:
+    sys.path.insert(0, os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))

@@ -1,54 +1,37 @@
-"""Shared benchmark harness utilities."""
+"""Shared benchmark harness utilities.
+
+Every figure benchmark describes its run as an
+:class:`~repro.fed.experiment.ExperimentSpec` (via :func:`build_spec`) and
+executes it with ``repro.fed.run_experiment`` / ``sweep`` — no hand-wired
+``FLEngine`` construction.
+"""
 from __future__ import annotations
 
-import time
-from typing import Callable, Dict, List
 
-import jax
-import numpy as np
-
-
-def build_fl(num_clients=20, tau=2, lr=0.05, batch_size=16, seed=0,
-             noniid=True, n_data=2000, **flkw):
-    """Paper-style FL engine: FCN classifier on synthetic mixture data.
+def build_spec(num_clients=20, tau=2, lr=0.05, batch_size=16, seed=0,
+               noniid=True, n_data=2000, n_eval=500, name="benchmark",
+               **flkw):
+    """Paper-style FL experiment spec: FCN classifier on synthetic mixture
+    data, non-iid label-skew split by default.
 
     Extra **flkw go straight into FLConfig — e.g. scheduler="chunked",
     chunk_size=32 for the memory-bounded large-cohort path.
     """
-    from repro.configs import get_config
-    from repro.data.synthetic import mixture_classification
-    from repro.fed import FLConfig, FLEngine, partition_iid, \
-        partition_label_skew
-    from repro.models.smallnets import apply_fcn, classifier_loss, init_fcn
+    from repro.fed import ComponentSpec, EvalPolicy, ExperimentSpec, FLConfig
 
-    cfg = get_config("paper-fcn")
-    params, _ = init_fcn(jax.random.PRNGKey(seed), cfg)
-    n_test = 500
-    x_all, y_all = mixture_classification(n_data + n_test, 10, seed=seed)
-    x, y = x_all[:n_data], y_all[:n_data]
-    xe, ye = x_all[n_data:], y_all[n_data:]        # held-out, same mixture
-    parts = (partition_label_skew(y, num_clients, 3, seed=seed) if noniid
-             else partition_iid(len(y), num_clients, seed=seed))
-    data = [{"x": x[p], "y": y[p]} for p in parts]
-    loss_fn = lambda p, b: classifier_loss(apply_fcn, p, cfg, b["x"], b["y"])
-    fl = FLEngine(loss_fn, params, data,
-                  FLConfig(num_clients=num_clients, tau=tau, lr=lr,
-                           batch_size=batch_size, seed=seed, **flkw))
-
-    def evaluate(params):
-        _, m = loss_fn(params, {"x": jax.numpy.asarray(xe),
-                                "y": jax.numpy.asarray(ye)})
-        return {"test_acc": float(m["acc"])}
-
-    return fl, evaluate
-
-
-def timed_rounds(fl, rounds: int, seed=1):
-    rng = np.random.RandomState(seed)
-    t0 = time.time()
-    for _ in range(rounds):
-        fl.run_round(rng)
-    return (time.time() - t0) / rounds * 1e6  # us per round
+    partition = (ComponentSpec("label_skew",
+                               {"classes_per_client": 3, "seed": seed})
+                 if noniid else ComponentSpec("iid", {"seed": seed}))
+    return ExperimentSpec(
+        name=name,
+        model=ComponentSpec("fcn"),
+        data=ComponentSpec("mixture",
+                           {"n": n_data, "n_eval": n_eval, "seed": seed}),
+        partition=partition,
+        fl=FLConfig(num_clients=num_clients, tau=tau, lr=lr,
+                    batch_size=batch_size, seed=seed, **flkw),
+        eval=EvalPolicy(every=0, final=True),
+    )
 
 
 def emit(name: str, us_per_call: float, derived: str):

@@ -2,27 +2,29 @@
 parameters shared (non-iid, delta = 0.2)."""
 from __future__ import annotations
 
-from benchmarks.common import build_fl, emit, timed_rounds
+from benchmarks.common import build_spec, emit
 
 
 def run(rounds=40, delta=0.2, scheduler="vmap", chunk_size=16):
     """scheduler/chunk_size select the engine's client-scheduling path:
     "chunked" bounds transient memory to O(chunk_size·M) for large K."""
-    fl_v, ev = build_fl(use_lbgm=False, noniid=True, scheduler=scheduler,
-                        chunk_size=chunk_size)
-    us_v = timed_rounds(fl_v, rounds)
-    acc_v = ev(fl_v.params)["test_acc"]
+    from repro.fed import run_experiment
 
-    fl_l, ev = build_fl(use_lbgm=True, delta_threshold=delta, noniid=True,
-                        scheduler=scheduler, chunk_size=chunk_size)
-    us_l = timed_rounds(fl_l, rounds)
-    acc_l = ev(fl_l.params)["test_acc"]
-    savings = 1 - fl_l.total_uplink / fl_v.total_uplink
+    res_v = run_experiment(
+        build_spec(name="fig5_vanilla", use_lbgm=False, noniid=True,
+                   scheduler=scheduler, chunk_size=chunk_size), rounds)
+    res_l = run_experiment(
+        build_spec(name="fig5_lbgm", use_lbgm=True, delta_threshold=delta,
+                   noniid=True, scheduler=scheduler,
+                   chunk_size=chunk_size), rounds)
+    acc_v = res_v.final_eval["test_acc"]
+    acc_l = res_l.final_eval["test_acc"]
+    savings = 1 - res_l.total_uplink / res_v.total_uplink
 
-    emit("fig5_vanilla_fl", us_v,
-         f"acc={acc_v:.3f} uplink_floats={fl_v.total_uplink:.3g}")
-    emit("fig5_lbgm", us_l,
-         f"acc={acc_l:.3f} uplink_floats={fl_l.total_uplink:.3g} "
+    emit("fig5_vanilla_fl", res_v.us_per_round,
+         f"acc={acc_v:.3f} uplink_floats={res_v.total_uplink:.3g}")
+    emit("fig5_lbgm", res_l.us_per_round,
+         f"acc={acc_l:.3f} uplink_floats={res_l.total_uplink:.3g} "
          f"savings={savings:.1%} acc_drop={acc_v - acc_l:+.3f}")
     return {"acc_vanilla": acc_v, "acc_lbgm": acc_l, "savings": savings}
 

@@ -1,23 +1,28 @@
 """Paper Fig. 6: effect of delta_threshold — larger thresholds buy more
-communication savings at some accuracy cost (takeaway 5)."""
+communication savings at some accuracy cost (takeaway 5). The threshold
+grid runs through the declarative ``sweep()`` driver."""
 from __future__ import annotations
 
-from benchmarks.common import build_fl, emit, timed_rounds
+from benchmarks.common import build_spec, emit
 
 
 def run(rounds=40, deltas=(0.01, 0.05, 0.2, 0.4)):
+    from repro.fed import run_experiment, sweep
+
+    res_van = run_experiment(
+        build_spec(name="fig6_vanilla", use_lbgm=False, noniid=True), rounds)
+    van_uplink = res_van.total_uplink
+
+    base_spec = build_spec(name="fig6", use_lbgm=True, noniid=True)
     results = {}
-    base, ev = build_fl(use_lbgm=False, noniid=True)
-    timed_rounds(base, rounds)
-    van_uplink = base.total_uplink
-    for d in deltas:
-        fl, ev = build_fl(use_lbgm=True, delta_threshold=d, noniid=True)
-        us = timed_rounds(fl, rounds)
-        acc = ev(fl.params)["test_acc"]
-        sav = 1 - fl.total_uplink / van_uplink
-        emit(f"fig6_delta_{d}", us,
+    for point, res in sweep(base_spec,
+                            {"fl.delta_threshold": list(deltas)}, rounds):
+        d = point["fl.delta_threshold"]
+        acc = res.final_eval["test_acc"]
+        sav = 1 - res.total_uplink / van_uplink
+        emit(f"fig6_delta_{d}", res.us_per_round,
              f"acc={acc:.3f} savings={sav:.1%} "
-             f"frac_scalar={fl.history[-1]['frac_scalar']:.2f}")
+             f"frac_scalar={res.records[-1].frac_scalar:.2f}")
         results[d] = {"acc": acc, "savings": sav}
     return results
 

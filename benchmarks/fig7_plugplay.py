@@ -2,7 +2,7 @@
 additional savings over the base compressor."""
 from __future__ import annotations
 
-from benchmarks.common import build_fl, emit, timed_rounds
+from benchmarks.common import build_spec, emit
 
 
 def run(rounds=30, scheduler="vmap"):
@@ -11,6 +11,8 @@ def run(rounds=30, scheduler="vmap"):
     *gracefully* to the base compressor, mirroring the paper's own 2/24
     inconsistent-overlap cases, Figs. 52-53), top-K without EF (strong
     recycling), and ATOMO."""
+    from repro.fed import run_experiment
+
     results = {}
     settings = [
         ("topk_ef", "topk", {"k_frac": 0.1}, True, 0.75),
@@ -18,23 +20,22 @@ def run(rounds=30, scheduler="vmap"):
         ("atomo", "atomo", {"rank": 2}, False, 0.5),
     ]
     for tag, comp, kw, use_ef, delta in settings:
-        base, ev = build_fl(use_lbgm=False, compressor=comp,
-                            compressor_kw=kw, error_feedback=use_ef,
-                            noniid=True, scheduler=scheduler)
-        us_b = timed_rounds(base, rounds)
-        acc_b = ev(base.params)["test_acc"]
-
-        fl, ev = build_fl(use_lbgm=True, delta_threshold=delta,
-                          compressor=comp, compressor_kw=kw,
-                          error_feedback=use_ef, noniid=True,
-                          scheduler=scheduler)
-        us_l = timed_rounds(fl, rounds)
-        acc_l = ev(fl.params)["test_acc"]
-        extra = 1 - fl.total_uplink / base.total_uplink
-        emit(f"fig7_{tag}", us_b,
-             f"acc={acc_b:.3f} uplink={base.total_uplink:.3g}")
-        emit(f"fig7_{tag}+lbgm", us_l,
-             f"acc={acc_l:.3f} uplink={fl.total_uplink:.3g} "
+        res_b = run_experiment(
+            build_spec(name=f"fig7_{tag}", use_lbgm=False, compressor=comp,
+                       compressor_kw=kw, error_feedback=use_ef, noniid=True,
+                       scheduler=scheduler), rounds)
+        res_l = run_experiment(
+            build_spec(name=f"fig7_{tag}+lbgm", use_lbgm=True,
+                       delta_threshold=delta, compressor=comp,
+                       compressor_kw=kw, error_feedback=use_ef, noniid=True,
+                       scheduler=scheduler), rounds)
+        acc_b = res_b.final_eval["test_acc"]
+        acc_l = res_l.final_eval["test_acc"]
+        extra = 1 - res_l.total_uplink / res_b.total_uplink
+        emit(f"fig7_{tag}", res_b.us_per_round,
+             f"acc={acc_b:.3f} uplink={res_b.total_uplink:.3g}")
+        emit(f"fig7_{tag}+lbgm", res_l.us_per_round,
+             f"acc={acc_l:.3f} uplink={res_l.total_uplink:.3g} "
              f"extra_savings={extra:.1%}")
         results[tag] = {"acc_base": acc_b, "acc_lbgm": acc_l,
                         "extra_savings": extra}

@@ -2,27 +2,28 @@
 bits-transferred reduction."""
 from __future__ import annotations
 
-from benchmarks.common import build_fl, emit, timed_rounds
+from benchmarks.common import build_spec, emit
 
 
 def run(rounds=30, scheduler="vmap"):
-    base, ev = build_fl(use_lbgm=False, compressor="signsgd", noniid=False,
-                        tau=1, scheduler=scheduler)
-    us_b = timed_rounds(base, rounds)
-    acc_b = ev(base.params)["test_acc"]
+    from repro.fed import run_experiment
 
+    res_b = run_experiment(
+        build_spec(name="fig8_signsgd", use_lbgm=False, compressor="signsgd",
+                   noniid=False, tau=1, scheduler=scheduler), rounds)
     # sign-compressed gradients agree on a fraction p of coordinates =>
     # cos ~ (2p-1); threshold tuned accordingly (paper App. C.2)
-    fl, ev = build_fl(use_lbgm=True, delta_threshold=0.7,
-                      compressor="signsgd", noniid=False, tau=1,
-                      scheduler=scheduler)
-    us_l = timed_rounds(fl, rounds)
-    acc_l = ev(fl.params)["test_acc"]
-    extra = 1 - fl.total_uplink / base.total_uplink
-    emit("fig8_signsgd", us_b,
-         f"acc={acc_b:.3f} uplink_float_equiv={base.total_uplink:.3g}")
-    emit("fig8_signsgd+lbgm", us_l,
-         f"acc={acc_l:.3f} uplink_float_equiv={fl.total_uplink:.3g} "
+    res_l = run_experiment(
+        build_spec(name="fig8_signsgd+lbgm", use_lbgm=True,
+                   delta_threshold=0.7, compressor="signsgd", noniid=False,
+                   tau=1, scheduler=scheduler), rounds)
+    acc_b = res_b.final_eval["test_acc"]
+    acc_l = res_l.final_eval["test_acc"]
+    extra = 1 - res_l.total_uplink / res_b.total_uplink
+    emit("fig8_signsgd", res_b.us_per_round,
+         f"acc={acc_b:.3f} uplink_float_equiv={res_b.total_uplink:.3g}")
+    emit("fig8_signsgd+lbgm", res_l.us_per_round,
+         f"acc={acc_l:.3f} uplink_float_equiv={res_l.total_uplink:.3g} "
          f"extra_savings={extra:.1%}")
     return {"acc_base": acc_b, "acc_lbgm": acc_l, "extra_savings": extra}
 

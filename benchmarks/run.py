@@ -1,13 +1,14 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV rows. Figures covered: 1 (PCA), 5 (standalone), 6 (threshold),
 # 7 (plug-and-play), 8 (SignSGD distributed), + kernel micro-bench.
+#
+# Run from the repo root as a module (the package __init__ bootstraps the
+# src/ path, same convention as pytest.ini's ``pythonpath = src``):
+#
+#     python -m benchmarks.run --only fig5
 from __future__ import annotations
 
 import argparse
-import os
-import sys
-
-sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:

@@ -1,44 +1,38 @@
 """LBGM as a plug-and-play layer on top of top-K sparsification with error
-feedback (paper P3), compared against top-K alone.
+feedback (paper P3), compared against top-K alone — two runs of the same
+``ExperimentSpec`` differing only in ``fl.use_lbgm``.
 
     PYTHONPATH=src python examples/fl_plug_and_play.py
 """
-import jax
-import numpy as np
-
-from repro.configs import get_config
-from repro.data.synthetic import mixture_classification
-from repro.fed import FLConfig, FLEngine, partition_label_skew
-from repro.models.smallnets import apply_fcn, classifier_loss, init_fcn
+from repro.fed import (ComponentSpec, EvalPolicy, ExperimentSpec, FLConfig,
+                       run_experiment)
 
 
-def build(use_lbgm: bool, scheduler: str = "chunked"):
-    cfg = get_config("paper-fcn")
-    params, _ = init_fcn(jax.random.PRNGKey(0), cfg)
-    x, y = mixture_classification(2000, 10)
-    parts = partition_label_skew(y, 20, 3)
-    data = [{"x": x[p], "y": y[p]} for p in parts]
-    loss_fn = lambda p, b: classifier_loss(apply_fcn, p, cfg, b["x"], b["y"])
+def make_spec(use_lbgm: bool, scheduler: str = "chunked") -> ExperimentSpec:
     # chunked scheduler: lax.scan over blocks of 10 clients bounds the
     # round's working set to O(10·M) instead of O(20·M) — same numbers
-    return FLEngine(loss_fn, params, data,
-                    FLConfig(num_clients=20, tau=2, lr=0.05,
-                             use_lbgm=use_lbgm, delta_threshold=0.2,
-                             compressor="topk",
-                             compressor_kw={"k_frac": 0.1},
-                             error_feedback=True,
-                             scheduler=scheduler, chunk_size=10))
+    return ExperimentSpec(
+        name="topk+lbgm" if use_lbgm else "topk",
+        model=ComponentSpec("fcn"),
+        data=ComponentSpec("mixture", {"n": 2000, "n_eval": 0}),
+        partition=ComponentSpec("label_skew", {"classes_per_client": 3}),
+        fl=FLConfig(num_clients=20, tau=2, lr=0.05,
+                    use_lbgm=use_lbgm, delta_threshold=0.2,
+                    compressor="topk", compressor_kw={"k_frac": 0.1},
+                    error_feedback=True,
+                    scheduler=scheduler, chunk_size=10),
+        rounds=40,
+        # this comparison is about uplink, not accuracy: skip eval entirely
+        eval=EvalPolicy(every=0, final=False),
+    )
 
 
 def main():
-    rounds = 40
-    base = build(use_lbgm=False)
-    base.run(rounds)
-    stacked = build(use_lbgm=True)
-    stacked.run(rounds)
-    print(f"top-K alone : loss {base.history[-1]['loss']:.4f}, "
+    base = run_experiment(make_spec(use_lbgm=False))
+    stacked = run_experiment(make_spec(use_lbgm=True))
+    print(f"top-K alone : loss {base.records[-1].loss:.4f}, "
           f"uplink {base.total_uplink:.3g} floats")
-    print(f"top-K + LBGM: loss {stacked.history[-1]['loss']:.4f}, "
+    print(f"top-K + LBGM: loss {stacked.records[-1].loss:.4f}, "
           f"uplink {stacked.total_uplink:.3g} floats")
     print(f"LBGM extra savings on top of top-K: "
           f"{1 - stacked.total_uplink / base.total_uplink:.1%}")

@@ -1,33 +1,39 @@
-"""Quickstart: LBGM federated learning in ~30 lines.
+"""Quickstart: declarative LBGM federated learning in ~30 lines.
+
+An experiment is one serializable object — an ``ExperimentSpec`` naming the
+model / dataset / partitioner by registry key plus the FL knobs — and one
+call: ``run_experiment(spec)``. The same spec round-trips through JSON
+(``spec.to_json()`` / ``ExperimentSpec.from_json``) and drives the CLI:
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python -m repro.fed.run --set fl.delta_threshold=0.4
 """
-import jax
-
-from repro.configs import get_config
-from repro.data.synthetic import mixture_classification
-from repro.fed import FLConfig, FLSystem, partition_label_skew
-from repro.models.smallnets import apply_fcn, classifier_loss, init_fcn
+from repro.fed import (ComponentSpec, EvalPolicy, ExperimentSpec, FLConfig,
+                       run_experiment)
 
 
 def main():
-    cfg = get_config("paper-fcn")
-    params, _ = init_fcn(jax.random.PRNGKey(0), cfg)
+    spec = ExperimentSpec(
+        name="quickstart",
+        # FCN classifier on the synthetic 28x28 mixture dataset; non-iid
+        # split where each of 20 clients sees only 3 of 10 classes
+        model=ComponentSpec("fcn"),
+        data=ComponentSpec("mixture", {"n": 2000, "num_classes": 10}),
+        partition=ComponentSpec("label_skew", {"classes_per_client": 3}),
+        fl=FLConfig(num_clients=20, tau=2, lr=0.05, use_lbgm=True,
+                    delta_threshold=0.2),
+        rounds=40,
+        eval=EvalPolicy(every=10, final=True, verbose=True),
+    )
+    assert spec == ExperimentSpec.from_json(spec.to_json())  # lossless
 
-    # non-iid federated split: each of 20 clients sees only 3 of 10 classes
-    x, y = mixture_classification(2000, num_classes=10)
-    parts = partition_label_skew(y, num_clients=20, classes_per_client=3)
-    data = [{"x": x[p], "y": y[p]} for p in parts]
+    result = run_experiment(spec)
 
-    loss_fn = lambda p, b: classifier_loss(apply_fcn, p, cfg, b["x"], b["y"])
-    fl = FLSystem(loss_fn, params, data,
-                  FLConfig(num_clients=20, tau=2, lr=0.05,
-                           use_lbgm=True, delta_threshold=0.2))
-    fl.run(rounds=40, verbose=True, eval_every=10)
-
-    m = fl.history[-1]
-    print(f"\nfinal loss {m['loss']:.4f} | uplink savings vs vanilla FL: "
-          f"{m['savings']:.1%} | scalar rounds: {m['frac_scalar']:.0%}")
+    last = result.records[-1]
+    print(f"\nfinal loss {last.loss:.4f} | test acc "
+          f"{result.final_eval['test_acc']:.3f} | uplink savings vs "
+          f"vanilla FL: {result.savings:.1%} | scalar rounds: "
+          f"{last.frac_scalar:.0%}")
 
 
 if __name__ == "__main__":

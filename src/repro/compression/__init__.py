@@ -1,23 +1,54 @@
-"""Gradient compression baselines the paper stacks LBGM on (P3/P4)."""
+"""Gradient compression baselines the paper stacks LBGM on (P3/P4).
+
+Each base compressor registers a factory ``(**kw) -> (grads -> (grads',
+uplink_float_cost))`` in the ``COMPRESSORS`` registry, so ``FLConfig`` /
+``ExperimentSpec`` can name them by string and third-party compressors plug
+in via ``@register_compressor("name")`` without touching this package.
+"""
+import inspect
+
+import jax.numpy as jnp
+
 from repro.compression import atomo, error_feedback, signsgd, topk  # noqa: F401
+from repro.core.tree_math import tree_size
+from repro.fed.registry import COMPRESSORS, register_compressor
+
+
+@register_compressor("none")
+def _identity_pipeline():
+    return lambda g: (g, jnp.asarray(float(tree_size(g)), jnp.float32))
+
+
+@register_compressor("topk")
+def _topk_pipeline(k_frac: float = 0.1):
+    return lambda g: topk.compress(g, k_frac)
+
+
+@register_compressor("signsgd")
+def _signsgd_pipeline():
+    return signsgd.compress
+
+
+@register_compressor("atomo")
+def _atomo_pipeline(rank: int = 2, method: str = "svd"):
+    return lambda g: atomo.compress(g, rank, method)
 
 
 def get_compressor(name: str, **kw):
     """Returns fn: grads -> (dense compressed grads, uplink float cost)."""
-    if name == "none":
-        import jax.numpy as jnp
-        from repro.core.tree_math import tree_size
-        return lambda g: (g, jnp.asarray(float(tree_size(g)), jnp.float32))
-    if name == "topk":
-        k_frac = kw.get("k_frac", 0.1)
-        return lambda g: topk.compress(g, k_frac)
-    if name == "signsgd":
-        return signsgd.compress
-    if name == "atomo":
-        rank = kw.get("rank", 2)
-        method = kw.get("method", "svd")
-        return lambda g: atomo.compress(g, rank, method)
-    raise ValueError(name)
+    factory = COMPRESSORS.get(name)
+    # check the kwargs bind *before* calling, so a mismatched kw dict
+    # (e.g. a sweep switched fl.compressor but kept a stale compressor_kw)
+    # gets an actionable error while genuine TypeErrors raised inside the
+    # factory body propagate untouched
+    try:
+        inspect.signature(factory).bind(**kw)
+    except TypeError:
+        accepted = sorted(inspect.signature(factory).parameters)
+        raise ValueError(
+            f"compressor {name!r} does not accept kwargs {sorted(kw)}; "
+            f"accepted kwargs: {accepted}") from None
+    return factory(**kw)
 
 
 def make_uplink_pipeline(name: str = "none", kw=None,

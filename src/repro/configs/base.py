@@ -9,6 +9,13 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
+# canonical FL/LBGM knob container — LBGMConfig below is the arch-side
+# *view* of it; shared defaults are read from FLConfig's fields so the two
+# cannot drift (repro.fed.flconfig is pure-Python, safe to import here)
+from repro.fed.flconfig import FLConfig
+
+_FL_DEFAULTS = {f.name: f.default for f in dataclasses.fields(FLConfig)}
+
 
 @dataclass(frozen=True)
 class MoEConfig:
@@ -20,14 +27,24 @@ class MoEConfig:
 
 @dataclass(frozen=True)
 class LBGMConfig:
-    """Paper Algorithm 1 knobs."""
-    enabled: bool = True
+    """Paper Algorithm 1 knobs — arch-side view of ``fed.flconfig.FLConfig``.
+
+    The algorithmic defaults (threshold, sampling, enablement) are FLConfig's
+    own; only the pod-scale execution defaults (``num_clients`` per
+    ("pod","data") axes, single local step) differ for the big-model
+    training path. Convert with :meth:`to_fl` / ``FLConfig.from_lbgm``.
+    """
+    enabled: bool = _FL_DEFAULTS["use_lbgm"]
     variant: str = "full"           # "full" | "topk" (compressed LBG, paper P3)
-    delta_threshold: float = 0.2    # sin^2(alpha) threshold (paper Fig. 5 uses 0.2)
+    delta_threshold: float = _FL_DEFAULTS["delta_threshold"]
     k_frac: float = 0.01            # for variant="topk": fraction of entries kept
     num_clients: int = 16           # client groups along the ("pod","data") axes
     local_steps: int = 1            # tau; >1 only supported in replicated mode
-    sample_frac: float = 1.0        # device sampling (Algorithm 3)
+    sample_frac: float = _FL_DEFAULTS["sample_frac"]
+
+    def to_fl(self, **overrides) -> FLConfig:
+        """The canonical engine config carrying these knobs."""
+        return FLConfig.from_lbgm(self, **overrides)
 
 
 @dataclass(frozen=True)

@@ -1,4 +1,59 @@
-from repro.fed.engine import (DenseLBGStore, FLConfig, FLEngine,  # noqa: F401
-                              NullLBGStore, TopKLBGStore, make_lbg_store)
-from repro.fed.partition import partition_iid, partition_label_skew  # noqa: F401
-from repro.fed.runtime import FLSystem  # noqa: F401
+"""Federated learning package: engine, declarative experiment API, shims.
+
+Attribute access is lazy (PEP 562) so light modules — ``repro.fed.registry``
+and ``repro.fed.flconfig`` are pure-Python — can be imported from any layer
+(``repro.compression`` registers its pipelines, ``repro.configs.base``
+derives its LBGM knob defaults) without this package eagerly pulling in the
+jax-heavy engine and creating an import cycle.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    # canonical config
+    "FLConfig": "repro.fed.flconfig",
+    # engine + pluggable pieces
+    "FLEngine": "repro.fed.engine",
+    "DenseLBGStore": "repro.fed.engine",
+    "NullLBGStore": "repro.fed.engine",
+    "TopKLBGStore": "repro.fed.engine",
+    "make_lbg_store": "repro.fed.engine",
+    "make_scheduler": "repro.fed.engine",
+    # declarative experiment API
+    "ExperimentSpec": "repro.fed.experiment",
+    "ComponentSpec": "repro.fed.experiment",
+    "EvalPolicy": "repro.fed.experiment",
+    "ExperimentResult": "repro.fed.experiment",
+    "RoundRecord": "repro.fed.experiment",
+    "build_experiment": "repro.fed.experiment",
+    "run_experiment": "repro.fed.experiment",
+    "sweep": "repro.fed.experiment",
+    # registries
+    "register_model": "repro.fed.registry",
+    "register_dataset": "repro.fed.registry",
+    "register_partitioner": "repro.fed.registry",
+    "register_compressor": "repro.fed.registry",
+    "register_scheduler": "repro.fed.registry",
+    "register_lbg_store": "repro.fed.registry",
+    # data partitioning
+    "partition_iid": "repro.fed.partition",
+    "partition_label_skew": "repro.fed.partition",
+    # deprecated alias
+    "FLSystem": "repro.fed.runtime",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module 'repro.fed' has no attribute {name!r}") from None
+    return getattr(importlib.import_module(module), name)
+
+
+def __dir__():
+    return __all__

@@ -3,10 +3,12 @@
 ``FLEngine`` is the single round-runner behind every FL reproduction in this
 repo (Figs. 5-8 benchmarks, the plug-and-play example, and the legacy
 ``FLSystem`` shim in ``repro.fed.runtime``). One jit'd round function is
-assembled from three pluggable pieces:
+assembled from three pluggable pieces, each resolved by string key through
+the registries in ``repro.fed.registry`` (the extension seam the
+declarative ``ExperimentSpec`` API builds on):
 
-1. **Client scheduler** — how the K clients' local training is mapped onto
-   the device:
+1. **Client scheduler** (``SCHEDULERS``) — how the K clients' local
+   training is mapped onto the device:
 
    * ``"vmap"``   — all K clients batched in one ``jax.vmap`` (the original
      runtime). Peak *transient* memory is O(K·M): every client's tau-step
@@ -25,27 +27,33 @@ assembled from three pluggable pieces:
    sequential per-client ``lax.scan`` (carry += w_k * g_k, k = 0..K-1), so
    their float addition order is identical and the two produce bit-for-bit
    equal params and metrics on the same seed (tested in
-   ``tests/test_engine.py``).
+   ``tests/test_engine.py``). A scheduler is a factory
+   ``(cfg, num_clients) -> obj`` with ``chunk``/``pad`` ints plus
+   ``prepare_batch(host_arrays)`` and
+   ``run(client_fn, params, batch, lbg, resid, w, maskf)``.
 
-2. **LBGStore** — how each client's look-back gradient is stored and how
-   Algorithm 1's accept/recycle decision is made:
+2. **LBGStore** (``LBG_STORES``) — how each client's look-back gradient is
+   stored and how Algorithm 1's accept/recycle decision is made:
 
-   * ``DenseLBGStore`` — paper-faithful dense pytree bank, one params-shaped
-     LBG per client (wraps ``repro.core.lbgm.lbgm_client_step``).
-   * ``TopKLBGStore`` — sparse (indices, values) bank at ``k_frac`` density
-     (wraps ``lbgm_topk_client_step``); the bank shrinks from O(K·M) to
-     O(K·k_frac·M), the enabling step for large-model cohorts.
-   * ``NullLBGStore`` — vanilla FL (``use_lbgm=False``): gradients pass
-     through, every round is a full round.
+   * ``DenseLBGStore`` (``"dense"``, legacy alias ``"full"``) —
+     paper-faithful dense pytree bank, one params-shaped LBG per client
+     (wraps ``repro.core.lbgm.lbgm_client_step``).
+   * ``TopKLBGStore`` (``"topk"``) — sparse (indices, values) bank at
+     ``k_frac`` density (wraps ``lbgm_topk_client_step``); the bank shrinks
+     from O(K·M) to O(K·k_frac·M), the enabling step for large-model
+     cohorts.
+   * ``NullLBGStore`` (``"null"``) — vanilla FL (``use_lbgm=False``):
+     gradients pass through, every round is a full round.
 
    A store implements ``init(params, K)``, ``client_step(grad, lbg_k)`` and
-   ``full_round_cost(base_cost)``; new storage schemes (e.g. quantized or
-   host-offloaded LBGs) plug in by implementing those three methods.
+   ``full_round_cost(base_cost, stats)``; new storage schemes (e.g.
+   quantized or host-offloaded LBGs) plug in via
+   ``@register_lbg_store("name")`` on a ``cfg -> store`` factory.
 
-3. **Uplink pipeline** — base compressor + error feedback composed behind
-   ``repro.compression.make_uplink_pipeline`` (top-K / ATOMO / SignSGD,
-   paper P3/P4), applied to the accumulated stochastic gradient before the
-   LBGM decision.
+3. **Uplink pipeline** (``COMPRESSORS``) — base compressor + error feedback
+   composed behind ``repro.compression.make_uplink_pipeline`` (top-K /
+   ATOMO / SignSGD, paper P3/P4), applied to the accumulated stochastic
+   gradient before the LBGM decision.
 
 Uplink accounting follows the paper's metric of floating-point parameters
 shared per worker: a scalar (recycle) round uploads exactly 1 float, a full
@@ -53,7 +61,6 @@ round pays the pipeline/store cost.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -63,25 +70,9 @@ import numpy as np
 from repro.compression import make_uplink_pipeline
 from repro.core import lbgm as lbgm_lib
 from repro.core.tree_math import tree_size, tree_zeros_like
-
-
-@dataclass
-class FLConfig:
-    num_clients: int = 100
-    tau: int = 2                     # local SGD steps per round
-    lr: float = 0.05
-    batch_size: int = 32
-    use_lbgm: bool = True
-    delta_threshold: float = 0.2
-    compressor: str = "none"         # none | topk | atomo | signsgd
-    compressor_kw: Optional[dict] = None
-    error_feedback: Optional[bool] = None   # default: on iff topk
-    sample_frac: float = 1.0         # Algorithm 3 device sampling
-    seed: int = 0
-    scheduler: str = "vmap"          # vmap | chunked
-    chunk_size: int = 16             # max clients per lax.scan block
-    lbg_variant: str = "dense"       # dense | topk  (LBG storage scheme)
-    lbg_kw: Optional[dict] = None    # e.g. {"k_frac": 0.1} for topk
+from repro.fed.flconfig import FLConfig  # noqa: F401  (re-export)
+from repro.fed.registry import (LBG_STORES, SCHEDULERS, register_lbg_store,
+                                register_scheduler)
 
 
 # ------------------------------------------------------------- LBG stores
@@ -147,15 +138,17 @@ class TopKLBGStore:
         return stats.uplink_floats
 
 
+register_lbg_store("null", lambda cfg: NullLBGStore())
+register_lbg_store("dense", aliases=("full",))(
+    lambda cfg: DenseLBGStore(cfg.delta_threshold))
+register_lbg_store("topk")(
+    lambda cfg: TopKLBGStore(cfg.delta_threshold, **(cfg.lbg_kw or {})))
+
+
 def make_lbg_store(cfg: FLConfig):
-    if not cfg.use_lbgm:
-        return NullLBGStore()
-    variant = {"full": "dense"}.get(cfg.lbg_variant, cfg.lbg_variant)
-    if variant == "dense":
-        return DenseLBGStore(cfg.delta_threshold)
-    if variant == "topk":
-        return TopKLBGStore(cfg.delta_threshold, **(cfg.lbg_kw or {}))
-    raise ValueError(f"unknown lbg_variant: {cfg.lbg_variant!r}")
+    """Resolve the configured LBG storage scheme through ``LBG_STORES``."""
+    key = "null" if not cfg.use_lbgm else cfg.resolved_lbg_variant
+    return LBG_STORES.get(key)(cfg)
 
 
 # ------------------------------------------------------------- schedulers
@@ -199,52 +192,88 @@ def _keep_sampled(maskf, new, old):
             maskf.reshape((-1,) + (1,) * (n.ndim - 1)) > 0, n, o), new, old)
 
 
-def _vmap_schedule(client_fn, params, batch, lbg, resid, w, maskf):
+@register_scheduler("vmap")
+class VmapScheduler:
     """All K clients in one vmap; O(K·M) transient working set."""
-    gt, new_lbg, new_res, loss, uplink, scalar = jax.vmap(
-        lambda b, l, r: client_fn(params, b, l, r))(batch, lbg, resid)
-    agg = _seq_weighted_sum(tree_zeros_like(params, jnp.float32), w, gt)
-    return (agg, _keep_sampled(maskf, new_lbg, lbg),
-            _keep_sampled(maskf, new_res, resid), loss, uplink, scalar)
+
+    def __init__(self, cfg: FLConfig, num_clients: int):
+        self.chunk, self.pad = num_clients, 0
+
+    def prepare_batch(self, stacked: Dict[str, np.ndarray]):
+        return stacked  # leaves stay (K, tau, b, ...)
+
+    def run(self, client_fn, params, batch, lbg, resid, w, maskf):
+        gt, new_lbg, new_res, loss, uplink, scalar = jax.vmap(
+            lambda b, l, r: client_fn(params, b, l, r))(batch, lbg, resid)
+        agg = _seq_weighted_sum(tree_zeros_like(params, jnp.float32), w, gt)
+        return (agg, _keep_sampled(maskf, new_lbg, lbg),
+                _keep_sampled(maskf, new_res, resid), loss, uplink, scalar)
 
 
-def _chunked_schedule(client_fn, params, batch, lbg, resid, w, maskf,
-                      chunk: int):
+@register_scheduler("chunked")
+class ChunkedScheduler:
     """lax.scan over blocks of `chunk` clients; O(chunk·M) transient set.
 
     The LBG / residual banks ride in the scan *carry* and are updated
     in place per chunk via dynamic_update_slice (rather than stacked as
     scan outputs), so XLA never materializes a second O(K·M) bank buffer.
-    Requires K % chunk == 0 (the engine zero-weight pads beforehand).
+    The engine allocates banks padded to the chunk grid (K + pad rows).
     """
-    K = w.shape[0]
-    n_chunks = K // chunk
-    slice_at = lambda t, i: jax.tree.map(
-        lambda x: jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk), t)
-    update_at = lambda t, u, i: jax.tree.map(
-        lambda x, v: jax.lax.dynamic_update_slice_in_dim(x, v, i * chunk,
-                                                         axis=0), t, u)
 
-    def chunk_body(carry, xs):
-        acc, lbg_bank, res_bank = carry
-        i, b_c, w_c, m_c = xs
-        l_c, r_c = slice_at(lbg_bank, i), slice_at(res_bank, i)
-        gt, nl, nr, loss, uplink, scalar = jax.vmap(
-            lambda b, l, r: client_fn(params, b, l, r))(b_c, l_c, r_c)
-        acc = _seq_weighted_sum(acc, w_c, gt)
-        lbg_bank = update_at(lbg_bank, _keep_sampled(m_c, nl, l_c), i)
-        res_bank = update_at(res_bank, _keep_sampled(m_c, nr, r_c), i)
-        return (acc, lbg_bank, res_bank), (loss, uplink, scalar)
+    def __init__(self, cfg: FLConfig, num_clients: int):
+        self.num_clients = num_clients
+        self.chunk = pick_chunk(num_clients, cfg.chunk_size)
+        self.pad = (-num_clients) % self.chunk
 
-    # batch arrives pre-chunked (n_chunks, chunk, ...) from the host so the
-    # scan reads straight out of the argument buffer (no device-side copy)
-    init = (tree_zeros_like(params, jnp.float32), lbg, resid)
-    (agg, new_lbg, new_res), (loss, uplink, scalar) = jax.lax.scan(
-        chunk_body, init,
-        (jnp.arange(n_chunks), batch, w.reshape(n_chunks, chunk),
-         maskf.reshape(n_chunks, chunk)))
-    return (agg, new_lbg, new_res,
-            loss.reshape(K), uplink.reshape(K), scalar.reshape(K))
+    def prepare_batch(self, stacked: Dict[str, np.ndarray]):
+        """(K, tau, b, ...) -> (n_chunks, chunk, tau, b, ...), padded
+        host-side so the device scan consumes the argument buffer
+        directly (no device-side copy)."""
+        chunk, pad = self.chunk, self.pad
+
+        def to_chunks(x):
+            if pad:
+                x = np.concatenate(
+                    [x, np.zeros((pad,) + x.shape[1:], x.dtype)])
+            return x.reshape((x.shape[0] // chunk, chunk) + x.shape[1:])
+        return {k: to_chunks(v) for k, v in stacked.items()}
+
+    def run(self, client_fn, params, batch, lbg, resid, w, maskf):
+        K, chunk, pad = self.num_clients, self.chunk, self.pad
+        if pad:
+            w = jnp.concatenate([w, jnp.zeros(pad, w.dtype)])
+            maskf = jnp.concatenate([maskf, jnp.zeros(pad, maskf.dtype)])
+        Kp = K + pad
+        n_chunks = Kp // chunk
+        slice_at = lambda t, i: jax.tree.map(
+            lambda x: jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk), t)
+        update_at = lambda t, u, i: jax.tree.map(
+            lambda x, v: jax.lax.dynamic_update_slice_in_dim(
+                x, v, i * chunk, axis=0), t, u)
+
+        def chunk_body(carry, xs):
+            acc, lbg_bank, res_bank = carry
+            i, b_c, w_c, m_c = xs
+            l_c, r_c = slice_at(lbg_bank, i), slice_at(res_bank, i)
+            gt, nl, nr, loss, uplink, scalar = jax.vmap(
+                lambda b, l, r: client_fn(params, b, l, r))(b_c, l_c, r_c)
+            acc = _seq_weighted_sum(acc, w_c, gt)
+            lbg_bank = update_at(lbg_bank, _keep_sampled(m_c, nl, l_c), i)
+            res_bank = update_at(res_bank, _keep_sampled(m_c, nr, r_c), i)
+            return (acc, lbg_bank, res_bank), (loss, uplink, scalar)
+
+        init = (tree_zeros_like(params, jnp.float32), lbg, resid)
+        (agg, new_lbg, new_res), (loss, uplink, scalar) = jax.lax.scan(
+            chunk_body, init,
+            (jnp.arange(n_chunks), batch, w.reshape(n_chunks, chunk),
+             maskf.reshape(n_chunks, chunk)))
+        return (agg, new_lbg, new_res, loss.reshape(Kp)[:K],
+                uplink.reshape(Kp)[:K], scalar.reshape(Kp)[:K])
+
+
+def make_scheduler(cfg: FLConfig, num_clients: int):
+    """Resolve the configured client scheduler through ``SCHEDULERS``."""
+    return SCHEDULERS.get(cfg.scheduler)(cfg, num_clients)
 
 
 # ------------------------------------------------------------- engine
@@ -261,18 +290,12 @@ class FLEngine:
         self.client_data = client_data
         K = flcfg.num_clients
         assert len(client_data) == K
-        if flcfg.scheduler not in ("vmap", "chunked"):
-            raise ValueError(f"unknown scheduler: {flcfg.scheduler!r}")
-        if flcfg.scheduler == "chunked":
-            if flcfg.chunk_size < 1:
-                raise ValueError(
-                    f"chunk_size must be >= 1, got {flcfg.chunk_size}")
-            # single source of truth for the scan-block layout: both the
-            # device round program and the host batch chunking use these
-            self._chunk = pick_chunk(K, flcfg.chunk_size)
-            self._pad = (-K) % self._chunk
-        else:
-            self._chunk, self._pad = K, 0
+        # the scheduler owns the scan-block layout (its run/prepare_batch
+        # consume it); _chunk/_pad stay mirrored here as the engine's
+        # introspection surface — bank padding below and the tier-1 layout
+        # assertions read them
+        self.sched = make_scheduler(flcfg, K)
+        self._chunk, self._pad = self.sched.chunk, self.sched.pad
         self.weights = np.array([len(next(iter(d.values())))
                                  for d in client_data], np.float64)
         self.weights = jnp.asarray(self.weights / self.weights.sum(),
@@ -327,34 +350,19 @@ class FLEngine:
     def _build_round(self):
         cfg = self.cfg
         client_fn = self._build_client_fn()
-        K = cfg.num_clients
-        chunk, pad = self._chunk, self._pad
+        sched = self.sched
 
         def round_fn(params, lbg, residual, batch, mask):
-            """batch leaves: (K, tau, b, ...); mask: (K,) participation.
-            In chunked mode the state banks are permanently padded to the
-            chunk grid (zero-weight phantom clients, always masked out),
-            so only the small per-round vectors need padding here."""
+            """batch leaves: scheduler layout (see prepare_batch);
+            mask: (K,) participation. In chunked mode the state banks are
+            permanently padded to the chunk grid (zero-weight phantom
+            clients, always masked out); the scheduler pads the small
+            per-round vectors itself."""
             maskf = mask.astype(jnp.float32)
             w = self.weights * maskf
             w = w / jnp.maximum(jnp.sum(w), 1e-12)
-            if cfg.scheduler == "chunked":
-                if pad:
-                    w_s = jnp.concatenate([w, jnp.zeros(pad, w.dtype)])
-                    m_s = jnp.concatenate([maskf, jnp.zeros(pad,
-                                                            maskf.dtype)])
-                else:
-                    w_s, m_s = w, maskf
-                agg, new_lbg, new_res, losses, uplink, scalar = \
-                    _chunked_schedule(client_fn, params, batch, lbg,
-                                      residual, w_s, m_s, chunk)
-                if pad:
-                    losses, uplink, scalar = (losses[:K], uplink[:K],
-                                              scalar[:K])
-            else:
-                agg, new_lbg, new_res, losses, uplink, scalar = \
-                    _vmap_schedule(client_fn, params, batch, lbg, residual,
-                                   w, maskf)
+            agg, new_lbg, new_res, losses, uplink, scalar = sched.run(
+                client_fn, params, batch, lbg, residual, w, maskf)
             new_params = jax.tree.map(
                 lambda p, a: p - cfg.lr * a.astype(p.dtype), params, agg)
             metrics = {
@@ -369,9 +377,9 @@ class FLEngine:
 
     # -------------------------------------------------------------- data
     def _sample_batches(self, rng: np.random.RandomState):
-        """Per-round client batches. vmap layout: leaves (K, tau, b, ...);
-        chunked layout: (n_chunks, chunk, tau, b, ...), padded host-side so
-        the device scan consumes the argument buffer directly."""
+        """Per-round client batches, laid out by the scheduler's
+        ``prepare_batch`` (vmap: (K, tau, b, ...); chunked:
+        (n_chunks, chunk, tau, b, ...), padded host-side)."""
         cfg = self.cfg
         out = None
         for d in self.client_data:
@@ -383,14 +391,7 @@ class FLEngine:
             for k, v in picked.items():
                 out[k].append(v)
         stacked = {k: np.stack(v) for k, v in out.items()}
-        if cfg.scheduler == "chunked":
-            chunk, pad = self._chunk, self._pad
-            def to_chunks(x):
-                if pad:
-                    x = np.concatenate(
-                        [x, np.zeros((pad,) + x.shape[1:], x.dtype)])
-                return x.reshape((x.shape[0] // chunk, chunk) + x.shape[1:])
-            stacked = {k: to_chunks(v) for k, v in stacked.items()}
+        stacked = self.sched.prepare_batch(stacked)
         return {k: jnp.asarray(v) for k, v in stacked.items()}
 
     # -------------------------------------------------------------- run

@@ -1,0 +1,115 @@
+"""Canonical FL/LBGM knob container — the single source of truth.
+
+``FLConfig`` is the one place the paper's Algorithm 1/3 knobs
+(``delta_threshold``, ``k_frac`` via ``lbg_kw``, ``num_clients``,
+``sample_frac``, ``tau``) and the engine's execution knobs (scheduler,
+chunking, compressor pipeline) are defined. The arch-side view
+``repro.configs.base.LBGMConfig`` is a thin shim over this class (its
+shared defaults are read from ``FLConfig``'s fields and it converts via
+``LBGMConfig.to_fl()`` / ``FLConfig.from_lbgm()``), so the two can no
+longer drift.
+
+Every field is validated at construction (not at ``FLEngine.__init__``):
+registry-keyed fields (``scheduler``, ``lbg_variant``, ``compressor``)
+are checked against the live registries and the error lists the
+registered names, so a typo fails immediately with the fix in the
+message. The dataclass is frozen so an :class:`ExperimentSpec` embedding
+it is immutable and safely shareable across sweep points.
+
+This module stays import-light (no jax): registries are consulted
+lazily, which also lets ``repro.configs`` import it without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+#: legacy spelling used by the arch-side LBGMConfig ("full" dense bank)
+_LBG_VARIANT_ALIASES = {"full": "dense"}
+
+
+@dataclass(frozen=True)
+class FLConfig:
+    num_clients: int = 100
+    tau: int = 2                     # local SGD steps per round
+    lr: float = 0.05
+    batch_size: int = 32
+    use_lbgm: bool = True
+    delta_threshold: float = 0.2
+    compressor: str = "none"         # registry key: none | topk | atomo | ...
+    compressor_kw: Optional[dict] = None
+    error_feedback: Optional[bool] = None   # default: on iff topk
+    sample_frac: float = 1.0         # Algorithm 3 device sampling
+    seed: int = 0
+    scheduler: str = "vmap"          # registry key: vmap | chunked | ...
+    chunk_size: int = 16             # max clients per lax.scan block
+    lbg_variant: str = "dense"       # registry key: dense | topk | null | ...
+    lbg_kw: Optional[dict] = None    # e.g. {"k_frac": 0.1} for topk
+
+    # ---------------------------------------------------------- validation
+    def __post_init__(self):
+        def bad(msg):
+            raise ValueError(f"FLConfig: {msg}")
+
+        if self.num_clients < 1:
+            bad(f"num_clients must be >= 1, got {self.num_clients}")
+        if self.tau < 1:
+            bad(f"tau must be >= 1, got {self.tau}")
+        if self.batch_size < 1:
+            bad(f"batch_size must be >= 1, got {self.batch_size}")
+        if not 0.0 < self.sample_frac <= 1.0:
+            bad(f"sample_frac must be in (0, 1], got {self.sample_frac}")
+        if self.chunk_size < 1:
+            bad(f"chunk_size must be >= 1, got {self.chunk_size}")
+        # registry-keyed fields: fail now, with the registered names in the
+        # message, instead of deep inside the engine build
+        from repro.fed import registry as reg
+        if self.scheduler not in reg.SCHEDULERS:
+            bad(f"unknown scheduler {self.scheduler!r}; registered "
+                f"schedulers: {reg.SCHEDULERS.names()}")
+        if self.use_lbgm and self.resolved_lbg_variant not in reg.LBG_STORES:
+            bad(f"unknown lbg_variant {self.lbg_variant!r}; registered "
+                f"lbg_stores: {reg.LBG_STORES.names()}")
+        if self.compressor not in reg.COMPRESSORS:
+            bad(f"unknown compressor {self.compressor!r}; registered "
+                f"compressors: {reg.COMPRESSORS.names()}")
+
+    # ------------------------------------------------------------- views
+    @property
+    def resolved_lbg_variant(self) -> str:
+        return _LBG_VARIANT_ALIASES.get(self.lbg_variant, self.lbg_variant)
+
+    def replace(self, **overrides) -> "FLConfig":
+        return dataclasses.replace(self, **overrides)
+
+    # ------------------------------------------------------ serialization
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "FLConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"FLConfig: unknown fields {sorted(unknown)}; "
+                f"known fields: {sorted(known)}")
+        return cls(**d)
+
+    # ------------------------------------------------- arch-config bridge
+    @classmethod
+    def from_lbgm(cls, lbgm, **overrides) -> "FLConfig":
+        """Build from an arch-side ``configs.base.LBGMConfig`` view."""
+        kw = dict(
+            use_lbgm=lbgm.enabled,
+            lbg_variant=lbgm.variant,
+            delta_threshold=lbgm.delta_threshold,
+            num_clients=lbgm.num_clients,
+            tau=lbgm.local_steps,
+            sample_frac=lbgm.sample_frac,
+        )
+        if _LBG_VARIANT_ALIASES.get(lbgm.variant, lbgm.variant) == "topk":
+            kw["lbg_kw"] = {"k_frac": lbgm.k_frac}
+        kw.update(overrides)
+        return cls(**kw)

@@ -1,0 +1,110 @@
+"""String-keyed component registries for the declarative experiment API.
+
+Every pluggable piece of an FL experiment — model, dataset, partitioner,
+uplink compressor, client scheduler, LBG storage scheme — resolves through
+one of the registries below, so an :class:`~repro.fed.experiment.ExperimentSpec`
+can name components by string and round-trip through JSON, and third-party
+code can extend the system without touching ``fed/engine.py``:
+
+    from repro.fed import register_model
+
+    @register_model("my-net")
+    def build(seed=0, **kw):
+        ...
+        return params, loss_fn
+
+This module is deliberately pure-Python (no jax, no repro imports) so any
+layer may import it without dragging in the engine. Built-in components
+live in jax-heavy modules (``repro.fed.engine``, ``repro.compression``,
+``repro.fed.experiment``); each registry lazily imports its
+``builtin_modules`` on first lookup so the built-ins are always visible
+regardless of import order.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, Iterable, Optional
+
+
+class Registry:
+    """A named string -> factory mapping with actionable error messages."""
+
+    def __init__(self, kind: str, builtin_modules: Iterable[str] = ()):
+        self.kind = kind
+        self._entries: Dict[str, Callable] = {}
+        self._aliases: Dict[str, str] = {}
+        self._builtin_modules = tuple(builtin_modules)
+        self._loaded_modules: set = set()
+
+    # ------------------------------------------------------------ loading
+    def _ensure_builtins(self) -> None:
+        # mark each module loaded only after its import succeeds: a failed
+        # import must surface as the real ImportError on every lookup, not
+        # latch the registry empty and report "registered: []". Re-entrancy
+        # is safe — the imports call register(), never back into here.
+        for mod in self._builtin_modules:
+            if mod not in self._loaded_modules:
+                importlib.import_module(mod)
+                self._loaded_modules.add(mod)
+
+    # -------------------------------------------------------- registration
+    def register(self, name: str, obj: Optional[Callable] = None,
+                 aliases: Iterable[str] = ()):
+        """Register ``obj`` under ``name`` (usable as a decorator).
+
+        Duplicate names are an error: silent overwrites are how two
+        experiments end up silently running different code under one key.
+        """
+        def _add(fn: Callable) -> Callable:
+            # validate name AND all aliases before mutating anything, so a
+            # collision leaves the registry untouched and the caller's
+            # corrected retry succeeds
+            if name in self._entries or name in self._aliases:
+                raise ValueError(
+                    f"duplicate {self.kind} registration {name!r}; "
+                    f"registered: {self.names()}")
+            for a in aliases:
+                if a in self._entries or a in self._aliases:
+                    raise ValueError(
+                        f"duplicate {self.kind} alias {a!r}; "
+                        f"registered: {self.names()}")
+            self._entries[name] = fn
+            for a in aliases:
+                self._aliases[a] = name
+            return fn
+        return _add if obj is None else _add(obj)
+
+    # ------------------------------------------------------------- lookup
+    def get(self, name: str) -> Callable:
+        self._ensure_builtins()
+        key = self._aliases.get(name, name)
+        try:
+            return self._entries[key]
+        except KeyError:
+            raise ValueError(
+                f"unknown {self.kind} {name!r}; registered "
+                f"{self.kind}s: {self.names()}") from None
+
+    def names(self) -> list:
+        self._ensure_builtins()
+        return sorted(self._entries)
+
+    def __contains__(self, name: str) -> bool:
+        self._ensure_builtins()
+        return name in self._entries or name in self._aliases
+
+
+MODELS = Registry("model", builtin_modules=("repro.fed.experiment",))
+DATASETS = Registry("dataset", builtin_modules=("repro.fed.experiment",))
+PARTITIONERS = Registry("partitioner",
+                        builtin_modules=("repro.fed.experiment",))
+COMPRESSORS = Registry("compressor", builtin_modules=("repro.compression",))
+SCHEDULERS = Registry("scheduler", builtin_modules=("repro.fed.engine",))
+LBG_STORES = Registry("lbg_store", builtin_modules=("repro.fed.engine",))
+
+register_model = MODELS.register
+register_dataset = DATASETS.register
+register_partitioner = PARTITIONERS.register
+register_compressor = COMPRESSORS.register
+register_scheduler = SCHEDULERS.register
+register_lbg_store = LBG_STORES.register

@@ -1,14 +1,28 @@
 """Back-compat shim — the FL runtime now lives in ``repro.fed.engine``.
 
 ``FLSystem`` predates the unified engine (pluggable client schedulers +
-LBGStore abstraction); it is kept as a thin alias so existing callers and
-checkpoints of the original all-clients-vmapped runtime keep working.
-New code should construct ``repro.fed.engine.FLEngine`` directly.
+LBGStore abstraction) and the declarative experiment API; constructing it
+now emits a :class:`DeprecationWarning` and routes through the same
+validated ``FLConfig`` + registry path as ``FLEngine``, so legacy callers
+and checkpoints of the original all-clients-vmapped runtime keep working.
+New code should describe the run as an
+:class:`~repro.fed.experiment.ExperimentSpec` and use ``run_experiment``
+(or construct ``repro.fed.engine.FLEngine`` directly when hand-wiring).
 """
 from __future__ import annotations
+
+import warnings
 
 from repro.fed.engine import FLConfig, FLEngine  # noqa: F401
 
 
 class FLSystem(FLEngine):
     """Deprecated alias for :class:`repro.fed.engine.FLEngine`."""
+
+    def __init__(self, *args, **kwargs):
+        warnings.warn(
+            "repro.fed.runtime.FLSystem is deprecated; build an "
+            "ExperimentSpec and call repro.fed.run_experiment (or use "
+            "repro.fed.engine.FLEngine directly)",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(*args, **kwargs)

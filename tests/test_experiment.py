@@ -1,0 +1,298 @@
+"""Declarative experiment API: spec serialization, registries, equivalence
+with hand-wired FLEngine runs, sweep driver, and the CLI.
+
+Acceptance pillars (ISSUE 2):
+  (a) ExperimentSpec round-trips losslessly through dict/JSON, and a spec
+      serialized + reloaded reproduces the same engine history on the same
+      seed,
+  (b) registries reject duplicates and give actionable unknown-key errors
+      (listing registered names), same for FLConfig field validation,
+  (c) run_experiment on a 4-client FCN spec reproduces a hand-wired
+      FLEngine's history bit-for-bit,
+  (d) the ``python -m repro.fed.run`` CLI applies ``--set`` overrides and
+      emits a result JSON.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.fed import (ComponentSpec, EvalPolicy, ExperimentSpec, FLConfig,
+                       build_experiment, run_experiment, sweep)
+from repro.fed.registry import Registry
+from repro.fed import registry as reg
+
+ROUNDS = 4
+
+
+def tiny_spec(**fl_overrides):
+    fl_kw = dict(num_clients=4, tau=2, lr=0.05, batch_size=8, seed=0,
+                 use_lbgm=True, delta_threshold=0.2)
+    fl_kw.update(fl_overrides)
+    return ExperimentSpec(
+        name="tiny",
+        model=ComponentSpec("fcn"),
+        data=ComponentSpec("mixture", {"n": 240, "n_eval": 60, "seed": 0}),
+        partition=ComponentSpec("label_skew",
+                                {"classes_per_client": 3, "seed": 0}),
+        fl=FLConfig(**fl_kw),
+        rounds=ROUNDS,
+        eval=EvalPolicy(every=2, final=True),
+    )
+
+
+# ------------------------------------------------- (a) spec serialization
+
+
+def test_spec_dict_roundtrip_identity():
+    spec = tiny_spec(compressor="topk", compressor_kw={"k_frac": 0.25},
+                     lbg_variant="topk", lbg_kw={"k_frac": 0.1})
+    assert ExperimentSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_spec_json_roundtrip_identity(tmp_path):
+    spec = tiny_spec()
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    path = tmp_path / "spec.json"
+    spec.save(str(path))
+    assert ExperimentSpec.load(str(path)) == spec
+
+
+def test_spec_from_dict_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown fields.*bogus"):
+        ExperimentSpec.from_dict({"bogus": 1})
+    with pytest.raises(ValueError, match="unknown fields.*delta"):
+        FLConfig.from_dict({"delta": 0.2})
+
+
+def test_json_reload_reproduces_history():
+    """Acceptance: a spec serialized to JSON and reloaded reproduces the
+    same history on the same seed."""
+    spec = tiny_spec()
+    res_a = run_experiment(spec)
+    res_b = run_experiment(ExperimentSpec.from_json(spec.to_json()))
+    assert res_a.history == res_b.history
+    assert res_a.final_eval == res_b.final_eval
+
+
+# --------------------------------------------------------- (b) registries
+
+
+def test_registry_duplicate_and_unknown_errors():
+    r = Registry("widget")
+    r.register("a", lambda: 1, aliases=("alpha",))
+    with pytest.raises(ValueError, match="duplicate widget.*'a'"):
+        r.register("a", lambda: 2)
+    with pytest.raises(ValueError, match="duplicate widget alias"):
+        r.register("b", lambda: 3, aliases=("alpha",))
+    # a rejected registration must leave the registry untouched: the
+    # corrected retry under the same name succeeds
+    assert "b" not in r
+    assert r.register("b", lambda: 3, aliases=("beta",))() == 3
+    with pytest.raises(ValueError) as ei:
+        r.get("nope")
+    assert "'a'" in str(ei.value)  # error lists registered names
+    assert r.get("alpha")() == 1
+    assert "a" in r and "alpha" in r and "nope" not in r
+
+
+def test_builtin_registries_populated():
+    assert {"vmap", "chunked"} <= set(reg.SCHEDULERS.names())
+    assert {"dense", "topk", "null"} <= set(reg.LBG_STORES.names())
+    assert {"none", "topk", "atomo", "signsgd"} <= \
+        set(reg.COMPRESSORS.names())
+    assert {"fcn", "cnn"} <= set(reg.MODELS.names())
+    assert "mixture" in reg.DATASETS
+    assert {"iid", "label_skew"} <= set(reg.PARTITIONERS.names())
+
+
+@pytest.mark.parametrize("bad,match", [
+    (dict(sample_frac=0.0), r"sample_frac"),
+    (dict(sample_frac=1.5), r"sample_frac"),
+    (dict(chunk_size=0), r"chunk_size"),
+    (dict(num_clients=0), r"num_clients"),
+    (dict(scheduler="warp"), r"unknown scheduler.*vmap"),
+    (dict(lbg_variant="bogus"), r"unknown lbg_variant.*dense"),
+    (dict(compressor="zip"), r"unknown compressor.*signsgd"),
+])
+def test_flconfig_validation_actionable(bad, match):
+    with pytest.raises(ValueError, match=match):
+        FLConfig(**bad)
+
+
+def test_stale_compressor_kw_actionable():
+    """A sweep switching fl.compressor but keeping a stale compressor_kw
+    must fail with the accepted kwargs, not a private-function TypeError."""
+    from repro.compression import get_compressor
+    with pytest.raises(ValueError, match="'signsgd'.*k_frac.*accepted"):
+        get_compressor("signsgd", k_frac=0.1)
+    assert get_compressor("topk", k_frac=0.1) is not None
+
+
+def test_empty_held_out_with_eval_policy_rejected():
+    spec = tiny_spec().with_overrides({"data.kw.n_eval": 0})
+    with pytest.raises(ValueError, match="held-out split is empty"):
+        build_experiment(spec)
+    # disabling eval makes the same spec legal
+    no_eval = dataclasses.replace(spec, eval=EvalPolicy(every=0, final=False))
+    engine, _ = build_experiment(no_eval)
+    assert engine.cfg.num_clients == 4
+
+
+def test_spec_unknown_component_lists_registered():
+    spec = tiny_spec()
+    with pytest.raises(ValueError, match="unknown model.*fcn"):
+        dataclasses.replace(spec,
+                            model=ComponentSpec("resnet9000")).validate()
+    with pytest.raises(ValueError, match="unknown dataset"):
+        dataclasses.replace(spec, data=ComponentSpec("imagenet")).validate()
+
+
+def test_with_overrides_dotted_keys():
+    spec = tiny_spec()
+    s2 = spec.with_overrides({"fl.delta_threshold": 0.4,
+                              "data.kw.n": 120,
+                              "model.kw.arch": "paper-fcn",
+                              "rounds": 7})
+    assert s2.fl.delta_threshold == 0.4 and s2.data.kw["n"] == 120
+    assert s2.model.kw["arch"] == "paper-fcn" and s2.rounds == 7
+    assert spec.fl.delta_threshold == 0.2  # original untouched
+    with pytest.raises(ValueError, match="unknown override key"):
+        spec.with_overrides({"fl.delta": 0.4})
+    with pytest.raises(ValueError, match="unknown override key"):
+        spec.with_overrides({"nope.x": 1})
+
+
+# ------------------------------------- (c) equivalence with hand-wired run
+
+
+def _hand_wired_engine():
+    """Exactly what build_experiment does for tiny_spec, spelled out."""
+    from repro.configs import get_config
+    from repro.data.synthetic import mixture_classification
+    from repro.fed import FLEngine, partition_label_skew
+    from repro.models.smallnets import apply_fcn, classifier_loss, init_fcn
+
+    cfg = get_config("paper-fcn")
+    params, _ = init_fcn(jax.random.PRNGKey(0), cfg)
+    x, y = mixture_classification(300, 10, seed=0)
+    xt, yt = x[:240], y[:240]
+    parts = partition_label_skew(yt, 4, 3, seed=0)
+    data = [{"x": xt[p], "y": yt[p]} for p in parts]
+    loss_fn = lambda p, b: classifier_loss(apply_fcn, p, cfg, b["x"], b["y"])
+    return FLEngine(loss_fn, params, data,
+                    FLConfig(num_clients=4, tau=2, lr=0.05, batch_size=8,
+                             seed=0, use_lbgm=True, delta_threshold=0.2))
+
+
+def test_run_experiment_matches_flengine_bit_for_bit():
+    res = run_experiment(tiny_spec())
+    engine = _hand_wired_engine()
+    ref_history = engine.run(ROUNDS)
+    assert res.history == ref_history  # float-exact, every round
+    assert res.total_uplink == engine.total_uplink
+    assert res.vanilla_uplink == engine.vanilla_uplink
+
+
+def test_model_kw_seed_overrides_fl_seed():
+    spec = tiny_spec().with_overrides({"model.kw.seed": 3})
+    engine, _ = build_experiment(spec)  # must not collide with fl.seed
+    base, _ = build_experiment(tiny_spec())
+    diffs = [float(np.abs(np.asarray(engine.params[k])
+                          - np.asarray(base.params[k])).max())
+             for k in engine.params]
+    assert max(diffs) > 0  # a different init seed actually took effect
+
+
+def test_build_experiment_returns_engine_and_eval():
+    engine, eval_fn = build_experiment(tiny_spec())
+    assert engine.cfg.num_clients == 4 and len(engine.client_data) == 4
+    ev = eval_fn(engine.params)
+    assert set(ev) == {"test_loss", "test_acc"}
+    assert np.isfinite(ev["test_loss"])
+
+
+def test_result_records_typed_and_serializable():
+    res = run_experiment(tiny_spec())
+    assert [r.round for r in res.records] == list(range(1, ROUNDS + 1))
+    # eval ran at the policy's cadence (every=2) and nowhere else
+    assert all(bool(r.eval) == (r.round % 2 == 0) for r in res.records)
+    assert res.savings == res.records[-1].savings
+    dumped = json.loads(json.dumps(res.to_dict()))
+    assert dumped["spec"]["fl"]["num_clients"] == 4
+    assert len(dumped["records"]) == ROUNDS
+
+
+def test_sweep_grid_and_explicit_points():
+    spec = dataclasses.replace(tiny_spec(), eval=EvalPolicy(final=False))
+    results = sweep(spec, {"fl.delta_threshold": [-1.0, 0.95]}, rounds=3)
+    assert [p["fl.delta_threshold"] for p, _ in results] == [-1.0, 0.95]
+    # larger threshold recycles at least as often => no more uplink
+    assert results[0][1].total_uplink >= results[1][1].total_uplink
+    explicit = sweep(spec, [{"fl.tau": 1}], rounds=1)
+    assert explicit[0][1].spec.fl.tau == 1
+
+
+def test_flsystem_emits_deprecation_warning():
+    from repro.fed import FLSystem
+    engine = _hand_wired_engine()  # donor for wiring args
+    with pytest.warns(DeprecationWarning, match="ExperimentSpec"):
+        fl = FLSystem(engine.loss_fn, engine.params, engine.client_data,
+                      engine.cfg)
+    # the legacy alias still runs through the validated engine path
+    m = fl.run_round(np.random.RandomState(0))
+    assert np.isfinite(m["loss"])
+
+
+def test_lbgm_config_bridge_single_source_of_truth():
+    from repro.configs.base import LBGMConfig
+    lb = LBGMConfig(variant="topk", k_frac=0.05, num_clients=8,
+                    local_steps=3, sample_frac=0.5)
+    fl = lb.to_fl(batch_size=4)
+    assert (fl.lbg_variant, fl.lbg_kw) == ("topk", {"k_frac": 0.05})
+    assert (fl.num_clients, fl.tau, fl.sample_frac) == (8, 3, 0.5)
+    assert fl.batch_size == 4
+    # shared defaults are literally FLConfig's
+    assert LBGMConfig().delta_threshold == FLConfig().delta_threshold
+    assert LBGMConfig().enabled == FLConfig().use_lbgm
+
+
+# ----------------------------------------------------------- (d) the CLI
+
+
+def test_cli_smoke_with_set_overrides(tmp_path, capsys):
+    from repro.fed import run as cli
+    out = tmp_path / "result.json"
+    rc = cli.main(["--rounds", "2",
+                   "--set", "fl.num_clients=4",
+                   "--set", "data.kw.n=160",
+                   "--set", "data.kw.n_eval=40",
+                   "--set", "eval.every=0",
+                   "--set", "name=cli-smoke",
+                   "--out", str(out)])
+    assert rc == 0
+    printed = capsys.readouterr().out
+    assert "cli-smoke" in printed and "savings" in printed
+    dumped = json.loads(out.read_text())
+    assert dumped["rounds"] == 2
+    assert dumped["spec"]["fl"]["num_clients"] == 4
+    assert len(dumped["records"]) == 2
+
+
+def test_cli_spec_file_and_print_spec(tmp_path, capsys):
+    from repro.fed import run as cli
+    path = tmp_path / "spec.json"
+    tiny_spec().save(str(path))
+    rc = cli.main(["--spec", str(path), "--print-spec",
+                   "--set", "fl.lr=0.1"])
+    assert rc == 0
+    dumped = json.loads(capsys.readouterr().out)
+    assert dumped["fl"]["lr"] == 0.1 and dumped["name"] == "tiny"
+
+
+def test_cli_rejects_malformed_set():
+    from repro.fed import run as cli
+    with pytest.raises(SystemExit):
+        cli.main(["--set", "no_equals_sign"])
