@@ -1,0 +1,39 @@
+"""Cohort-scaling benchmark: ms/round across the three client schedulers.
+
+The scale-axis claim behind the scheduler stack: vmap's transient working
+set is O(K·M), chunked bounds it to O(chunk·M), and sharded splits that
+over a client mesh to O(chunk·M / n_devices). This entry sweeps cohort
+size K over all three (sharded on whatever devices the process sees —
+force more with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)
+and reports per-round wall time plus the round's uplink savings so the
+accounting can be eyeballed for scheduler-independence.
+"""
+from __future__ import annotations
+
+from benchmarks.common import build_spec, emit
+
+
+def run(rounds: int = 3, cohorts=(32, 128), chunk_size: int = 8) -> None:
+    import jax
+
+    from repro.fed import run_experiment
+
+    n_dev = len(jax.devices())
+    for K in cohorts:
+        for sched in ("vmap", "chunked", "sharded"):
+            flkw = dict(scheduler=sched, use_lbgm=True, delta_threshold=0.2,
+                        lbg_variant="topk", lbg_kw={"k_frac": 0.1})
+            if sched != "vmap":
+                flkw["chunk_size"] = chunk_size
+            if sched == "sharded":
+                flkw.update(mesh=n_dev, lbg_variant="topk-sharded")
+            spec = build_spec(num_clients=K, n_data=4 * K * 16,
+                              name=f"cohort-{sched}-K{K}", **flkw)
+            result = run_experiment(spec, rounds)
+            emit(f"cohort_scaling/{sched}/K{K}", result.us_per_round,
+                 f"savings={result.savings:.3f};n_dev={n_dev}")
+
+
+if __name__ == "__main__":
+    import benchmarks  # noqa: F401  (src/ path bootstrap)
+    run()

@@ -14,7 +14,8 @@ import argparse
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,fig5,fig6,fig7,fig8,kernels")
+                    help="comma list: fig1,fig5,fig6,fig7,fig8,kernels,"
+                         "cohort")
     ap.add_argument("--rounds", type=int, default=30)
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
@@ -41,6 +42,9 @@ def main() -> None:
     if on("kernels"):
         from benchmarks import kernel_bench
         kernel_bench.run()
+    if on("cohort"):
+        from benchmarks import cohort_scaling
+        cohort_scaling.run(rounds=min(args.rounds, 5))
 
 
 if __name__ == '__main__':

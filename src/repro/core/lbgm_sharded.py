@@ -90,6 +90,27 @@ def init_sharded_lbg(params_like, gspecs, mesh, k_frac: float):
                         is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
 
 
+def make_local_topk_step(delta: float, k_frac: float, *, corr=None,
+                         psum_axes=None, out_dtypes=False):
+    """Device-local Algorithm-1 top-k step: ``fn(grads, lbg)``.
+
+    This is the single decision body both sharded execution modes share:
+
+    * model-axis sharding (``make_sharded_topk_step``) calls it on gradient
+      *shards* with ``corr``/``psum_axes`` so the three partial scalars are
+      reduced across devices;
+    * client-axis sharding (``repro.fed.engine.ShardedTopKLBGStore``) calls
+      it with no psum at all — each device holds its local clients' full
+      dense gradients and their (idx, val) bank rows, so the accept/recycle
+      decision is entirely device-local and the only cross-device traffic
+      of the round is the server aggregate's psum.
+    """
+    def step(grads, lbg):
+        return topk_step_core(grads, lbg, delta, k_frac, corr=corr,
+                              psum_axes=psum_axes, out_dtypes=out_dtypes)
+    return step
+
+
 def make_sharded_topk_step(cfg, mesh: Mesh, gspecs: Dict[str, P],
                            delta: float):
     """Returns fn(grads, lbg) -> (g_tilde, new_lbg, LBGMStats), where grads
@@ -105,9 +126,8 @@ def make_sharded_topk_step(cfg, mesh: Mesh, gspecs: Dict[str, P],
     corr = {name: total_dev / _nshards(mesh, _spec_axes(gspecs[name]))
             for name in gspecs}
 
-    def local_fn(grads, lbg):
-        return topk_step_core(grads, lbg, delta, k_frac, corr=corr,
-                              psum_axes=all_axes, out_dtypes=True)
+    local_fn = make_local_topk_step(delta, k_frac, corr=corr,
+                                    psum_axes=all_axes, out_dtypes=True)
 
     stat_spec = LBGMStats(*([P()] * 5))
     return _shard_map(

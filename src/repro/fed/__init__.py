@@ -17,6 +17,7 @@ _EXPORTS = {
     "FLEngine": "repro.fed.engine",
     "DenseLBGStore": "repro.fed.engine",
     "NullLBGStore": "repro.fed.engine",
+    "ShardedTopKLBGStore": "repro.fed.engine",
     "TopKLBGStore": "repro.fed.engine",
     "make_lbg_store": "repro.fed.engine",
     "make_scheduler": "repro.fed.engine",

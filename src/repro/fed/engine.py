@@ -22,15 +22,25 @@ declarative ``ExperimentSpec`` API builds on):
      ``chunk_size`` (never more memory than requested, no wasted compute);
      when K is near-prime and that divisor would be tiny, the engine keeps
      ``chunk_size`` and zero-weight pads the last block instead.
+   * ``"sharded"`` — the chunked layout with each block's client axis
+     additionally mapped over a 1-D device mesh via ``shard_map``
+     (``FLConfig.mesh`` devices, resolved through
+     ``launch.mesh.make_client_mesh``). Per-device transient memory is
+     O(chunk·M / n_devices) and the chunk's clients train on all devices
+     concurrently — the scale axis for 512+ client cohorts.
 
-   Both schedulers accumulate the server aggregate with the *same* strictly
+   All schedulers accumulate the server aggregate with the *same* strictly
    sequential per-client ``lax.scan`` (carry += w_k * g_k, k = 0..K-1), so
-   their float addition order is identical and the two produce bit-for-bit
-   equal params and metrics on the same seed (tested in
-   ``tests/test_engine.py``). A scheduler is a factory
-   ``(cfg, num_clients) -> obj`` with ``chunk``/``pad`` ints plus
-   ``prepare_batch(host_arrays)`` and
-   ``run(client_fn, params, batch, lbg, resid, w, maskf)``.
+   their float addition order is identical and vmap/chunked (and sharded on
+   a 1-device mesh) produce bit-for-bit equal params and metrics on the
+   same seed (tested in ``tests/test_engine.py`` /
+   ``tests/test_sharded_scheduler.py``); a multi-device sharded round only
+   reassociates the final psum (fp32-tolerance equal, identical uplink
+   accounting). A scheduler is a factory ``(cfg, num_clients) -> obj`` with
+   ``chunk``/``pad`` ints plus ``prepare_batch(host_arrays)`` and
+   ``run(client_fn, params, batch, lbg, resid, w, maskf)``; an optional
+   ``layout_banks(bank)`` hook lets it own the state banks' physical
+   layout.
 
 2. **LBGStore** (``LBG_STORES``) — how each client's look-back gradient is
    stored and how Algorithm 1's accept/recycle decision is made:
@@ -44,6 +54,12 @@ declarative ``ExperimentSpec`` API builds on):
      cohorts.
    * ``NullLBGStore`` (``"null"``) — vanilla FL (``use_lbgm=False``):
      gradients pass through, every round is a full round.
+   * ``ShardedTopKLBGStore`` (``"topk-sharded"``) — the top-K bank laid
+     out for the sharded scheduler: rows live on the device that trains
+     their client (client-axis sharding via ``layout_banks``), and the
+     accept/recycle decision reuses ``topk_step_core`` through
+     ``repro.core.lbgm_sharded.make_local_topk_step`` — fully
+     device-local, so LBGM adds zero cross-device traffic.
 
    A store implements ``init(params, K)``, ``client_step(grad, lbg_k)`` and
    ``full_round_cost(base_cost, stats)``; new storage schemes (e.g.
@@ -66,9 +82,12 @@ from typing import Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.comm.accounting import CommLedger
 from repro.compression import make_uplink_pipeline
 from repro.core import lbgm as lbgm_lib
+from repro.core.lbgm_sharded import _SM_KW, _shard_map, make_local_topk_step
 from repro.core.tree_math import tree_size, tree_zeros_like
 from repro.fed.flconfig import FLConfig  # noqa: F401  (re-export)
 from repro.fed.registry import (LBG_STORES, SCHEDULERS, register_lbg_store,
@@ -138,11 +157,38 @@ class TopKLBGStore:
         return stats.uplink_floats
 
 
+class ShardedTopKLBGStore(TopKLBGStore):
+    """Sparse (idx, val) bank laid out for client-axis sharding.
+
+    Same bank shapes and cost model as :class:`TopKLBGStore`, but the
+    accept/recycle decision goes through
+    ``repro.core.lbgm_sharded.make_local_topk_step`` — the shared
+    device-local body of the shard_map variant (``topk_step_core``) — with
+    no psum: under the ``"sharded"`` scheduler each device holds its local
+    clients' full dense gradients *and* their bank rows (the bank is placed
+    along the client mesh axis by ``ShardedScheduler.layout_banks``), so
+    the decision never crosses devices and per-client cross-device traffic
+    stays at the three aggregate-psum scalars. Numerically identical to
+    ``TopKLBGStore`` (both run ``topk_step_core``), so the two stores are
+    interchangeable bit-for-bit on any scheduler.
+    """
+
+    def __init__(self, delta_threshold: float, k_frac: float = 0.1):
+        super().__init__(delta_threshold, k_frac)
+        self._step = make_local_topk_step(delta_threshold, k_frac)
+
+    def client_step(self, grad, lbg_k):
+        return self._step(grad, lbg_k)
+
+
 register_lbg_store("null", lambda cfg: NullLBGStore())
 register_lbg_store("dense", aliases=("full",))(
     lambda cfg: DenseLBGStore(cfg.delta_threshold))
 register_lbg_store("topk")(
     lambda cfg: TopKLBGStore(cfg.delta_threshold, **(cfg.lbg_kw or {})))
+register_lbg_store("topk-sharded")(
+    lambda cfg: ShardedTopKLBGStore(cfg.delta_threshold,
+                                    **(cfg.lbg_kw or {})))
 
 
 def make_lbg_store(cfg: FLConfig):
@@ -271,6 +317,129 @@ class ChunkedScheduler:
                 uplink.reshape(Kp)[:K], scalar.reshape(Kp)[:K])
 
 
+def pick_sharded_chunk(num_clients: int, chunk_size: int, n_dev: int) -> int:
+    """Scan-block size for the sharded scheduler.
+
+    Same policy as :func:`pick_chunk` with one extra constraint: the block
+    must split evenly over the ``n_dev`` mesh devices (shard_map requires
+    ``chunk % n_dev == 0``). ``n_dev == 1`` reduces to ``pick_chunk``
+    exactly — that shared layout is half of what makes the 1-device sharded
+    round bit-identical to the chunked one.
+    """
+    if n_dev == 1:
+        return pick_chunk(num_clients, chunk_size)
+    # cap at min(chunk_size, K) like pick_chunk (never more memory than
+    # requested, no chunk mostly made of phantom clients), then round down
+    # to the mesh grid — but never below n_dev, the smallest legal block
+    c = max(min(chunk_size, num_clients) // n_dev * n_dev, n_dev)
+    divs = [x for x in range(n_dev, c + 1, n_dev) if num_clients % x == 0]
+    if divs and divs[-1] >= max(n_dev, c // 2):
+        return divs[-1]
+    return c
+
+
+@register_scheduler("sharded")
+class ShardedScheduler(ChunkedScheduler):
+    """Chunked layout with each block's client axis mapped over a device
+    mesh: the same (n_chunks, chunk) ``lax.scan``, but every chunk's
+    clients train data-parallel under ``shard_map`` on a 1-D client mesh
+    (``FLConfig.mesh`` devices, resolved by ``launch.mesh.make_client_mesh``),
+    so the per-DEVICE transient set is O(chunk·M / n_devices).
+
+    State banks are stored ``(n_chunks, chunk, ...)`` with the chunk's
+    client axis sharded over the mesh (see :meth:`layout_banks`), so the
+    per-chunk bank slice/update and the LBGM accept/recycle decision are
+    entirely device-local; the only cross-device traffic per chunk is one
+    fp32 psum of the weighted aggregate (plus loss/uplink scalars).
+
+    Device 0 folds the scan carry into its local strictly-sequential
+    accumulation, so on a 1-device mesh the addition order — and therefore
+    the whole round history — is bit-identical to ``ChunkedScheduler``;
+    on larger meshes the psum reassociates the sum across devices, which is
+    the documented fp32-tolerance difference (uplink accounting is still
+    exact: the per-client decision never crosses devices).
+    """
+
+    AXIS = "clients"
+
+    def __init__(self, cfg: FLConfig, num_clients: int):
+        from repro.launch.mesh import make_client_mesh
+        self.mesh = make_client_mesh(cfg.mesh, axis=self.AXIS)
+        self.n_dev = int(self.mesh.devices.size)
+        self.num_clients = num_clients
+        self.chunk = pick_sharded_chunk(num_clients, cfg.chunk_size,
+                                        self.n_dev)
+        self.pad = (-num_clients) % self.chunk
+
+    # ------------------------------------------------------ bank placement
+    def layout_banks(self, bank):
+        """(Kp, ...) bank -> (n_chunks, chunk, ...), client axis sharded.
+
+        The round scan indexes whole chunks (axis 0), so sharding axis 1
+        over the mesh puts every chunk's bank rows exactly where its
+        clients train — per-chunk slice/update never moves bank bytes
+        between devices."""
+        def f(x):
+            x = x.reshape((x.shape[0] // self.chunk, self.chunk)
+                          + x.shape[1:])
+            if self.n_dev > 1:
+                x = jax.device_put(
+                    x, NamedSharding(self.mesh, P(None, self.AXIS)))
+            return x
+        return jax.tree.map(f, bank)
+
+    def run(self, client_fn, params, batch, lbg, resid, w, maskf):
+        K, chunk, pad, ax = self.num_clients, self.chunk, self.pad, self.AXIS
+        if pad:
+            w = jnp.concatenate([w, jnp.zeros(pad, w.dtype)])
+            maskf = jnp.concatenate([maskf, jnp.zeros(pad, maskf.dtype)])
+        Kp = K + pad
+        n_chunks = Kp // chunk
+        rep, cl = P(), P(ax)
+
+        def local_chunk(acc, p, b, l, r, w_c, m_c):
+            gt, nl, nr, loss, uplink, scalar = jax.vmap(
+                lambda bb, ll, rr: client_fn(p, bb, ll, rr))(b, l, r)
+            # device 0 seeds its local accumulation with the scan carry, so
+            # each chunk folds into the aggregate in the same strictly
+            # sequential order as ChunkedScheduler; the psum is the
+            # identity on a 1-device mesh
+            first = jax.lax.axis_index(ax) == 0
+            acc = jax.tree.map(lambda a: jnp.where(first, a, 0.0), acc)
+            acc = jax.lax.psum(_seq_weighted_sum(acc, w_c, gt), ax)
+            return (acc, _keep_sampled(m_c, nl, l),
+                    _keep_sampled(m_c, nr, r), loss, uplink, scalar)
+
+        sharded_chunk = _shard_map(
+            local_chunk, mesh=self.mesh,
+            in_specs=(rep, rep, cl, cl, cl, cl, cl),
+            out_specs=(rep, cl, cl, cl, cl, cl), **_SM_KW)
+
+        idx_at = lambda t, i: jax.tree.map(
+            lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False),
+            t)
+        put_at = lambda t, u, i: jax.tree.map(
+            lambda x, v: jax.lax.dynamic_update_index_in_dim(x, v, i, 0),
+            t, u)
+
+        def chunk_body(carry, xs):
+            acc, lbg_bank, res_bank = carry
+            i, b_c, w_c, m_c = xs
+            l_c, r_c = idx_at(lbg_bank, i), idx_at(res_bank, i)
+            acc, nl, nr, loss, uplink, scalar = sharded_chunk(
+                acc, params, b_c, l_c, r_c, w_c, m_c)
+            return ((acc, put_at(lbg_bank, nl, i), put_at(res_bank, nr, i)),
+                    (loss, uplink, scalar))
+
+        init = (tree_zeros_like(params, jnp.float32), lbg, resid)
+        (agg, new_lbg, new_res), (loss, uplink, scalar) = jax.lax.scan(
+            chunk_body, init,
+            (jnp.arange(n_chunks), batch, w.reshape(n_chunks, chunk),
+             maskf.reshape(n_chunks, chunk)))
+        return (agg, new_lbg, new_res, loss.reshape(Kp)[:K],
+                uplink.reshape(Kp)[:K], scalar.reshape(Kp)[:K])
+
+
 def make_scheduler(cfg: FLConfig, num_clients: int):
     """Resolve the configured client scheduler through ``SCHEDULERS``."""
     return SCHEDULERS.get(cfg.scheduler)(cfg, num_clients)
@@ -290,6 +459,14 @@ class FLEngine:
         self.client_data = client_data
         K = flcfg.num_clients
         assert len(client_data) == K
+        empty = [k for k, d in enumerate(client_data)
+                 if len(next(iter(d.values()))) == 0]
+        if empty:
+            raise ValueError(
+                f"FLEngine: clients {empty} have no training samples; "
+                "every client needs >= 1 (a label-skew partition starves "
+                "clients when class demand exceeds supply — use more data, "
+                "fewer clients, or more classes_per_client)")
         # the scheduler owns the scan-block layout (its run/prepare_batch
         # consume it); _chunk/_pad stay mirrored here as the engine's
         # introspection surface — bank padding below and the tier-1 layout
@@ -311,11 +488,18 @@ class FLEngine:
         self.residual = jax.tree.map(
             lambda p: jnp.zeros((Kp,) + p.shape, jnp.float32), params) \
             if self._use_ef else {}
+        # a scheduler may own the banks' physical layout (the sharded
+        # scheduler reshapes to (n_chunks, chunk, ...) and places the
+        # client axis over its mesh); values are unchanged
+        if hasattr(self.sched, "layout_banks"):
+            self.lbg = self.sched.layout_banks(self.lbg)
+            self.residual = self.sched.layout_banks(self.residual)
         # donate the LBG/residual banks: the round's new state reuses the
         # old banks' buffers instead of allocating a second O(K·M) copy
         self._round = jax.jit(self._build_round(), donate_argnums=(1, 2))
-        self.total_uplink = 0.0
-        self.vanilla_uplink = 0.0
+        # uplink accounting lives in one place (repro.comm.accounting);
+        # run_round records into it and history fields derive from it
+        self.ledger = CommLedger()
         self.history: List[Dict[str, float]] = []
 
     # -------------------------------------------------------------- build
@@ -394,25 +578,50 @@ class FLEngine:
         stacked = self.sched.prepare_batch(stacked)
         return {k: jnp.asarray(v) for k, v in stacked.items()}
 
+    def _sample_mask(self, rng: np.random.RandomState) -> np.ndarray:
+        """Algorithm-3 participation mask for one round.
+
+        Consumes exactly ``num_clients`` uniforms from ``rng`` when
+        ``sample_frac < 1`` (and none otherwise) on EVERY path: the
+        empty-cohort fallback reuses the uniforms already in hand (the
+        client closest to its sampling threshold) instead of drawing extra
+        state, so one unlucky round cannot shift every subsequent round's
+        batch/mask stream.
+        """
+        cfg = self.cfg
+        if cfg.sample_frac >= 1.0:
+            return np.ones(cfg.num_clients)
+        u = rng.rand(cfg.num_clients)
+        mask = (u < cfg.sample_frac).astype(np.float64)
+        if mask.sum() == 0:
+            mask[int(np.argmin(u))] = 1.0
+        return mask
+
     # -------------------------------------------------------------- run
     def run_round(self, rng: np.random.RandomState) -> Dict[str, float]:
-        cfg = self.cfg
         batch = self._sample_batches(rng)
-        mask = (rng.rand(cfg.num_clients) < cfg.sample_frac) \
-            if cfg.sample_frac < 1.0 else np.ones(cfg.num_clients)
-        if mask.sum() == 0:
-            mask[rng.randint(cfg.num_clients)] = 1
+        mask = self._sample_mask(rng)
         self.params, self.lbg, self.residual, metrics = self._round(
             self.params, self.lbg, self.residual, batch,
             jnp.asarray(mask, jnp.float32))
         m = {k: float(v) for k, v in metrics.items()}
-        self.total_uplink += m["uplink_floats"]
-        self.vanilla_uplink += float(mask.sum()) * tree_size(self.params)
-        m["total_uplink"] = self.total_uplink
-        m["vanilla_uplink"] = self.vanilla_uplink
-        m["savings"] = 1.0 - self.total_uplink / max(self.vanilla_uplink, 1.0)
+        self.ledger.record(m["uplink_floats"],
+                           float(mask.sum()) * tree_size(self.params))
+        m["total_uplink"] = self.ledger.uplink_floats
+        m["vanilla_uplink"] = self.ledger.vanilla_floats
+        m["savings"] = self.ledger.savings
         self.history.append(m)
         return m
+
+    # engine-level accounting views derive from the ledger — the duplicate
+    # hand-rolled counters (and their divergent savings guard) are gone
+    @property
+    def total_uplink(self) -> float:
+        return self.ledger.uplink_floats
+
+    @property
+    def vanilla_uplink(self) -> float:
+        return self.ledger.vanilla_floats
 
     def run(self, rounds: int, eval_fn: Optional[Callable] = None,
             eval_every: int = 10, verbose: bool = False):

@@ -44,6 +44,9 @@ class FLConfig:
     seed: int = 0
     scheduler: str = "vmap"          # registry key: vmap | chunked | ...
     chunk_size: int = 16             # max clients per lax.scan block
+    mesh: Optional[int] = None       # "sharded" scheduler: device count for
+                                     # the client mesh (None = all local
+                                     # devices; resolved by launch/mesh.py)
     lbg_variant: str = "dense"       # registry key: dense | topk | null | ...
     lbg_kw: Optional[dict] = None    # e.g. {"k_frac": 0.1} for topk
 
@@ -62,6 +65,11 @@ class FLConfig:
             bad(f"sample_frac must be in (0, 1], got {self.sample_frac}")
         if self.chunk_size < 1:
             bad(f"chunk_size must be >= 1, got {self.chunk_size}")
+        # mesh stays a plain int (device count) so the config — and any
+        # ExperimentSpec embedding it — remains JSON-serializable; the
+        # sharded scheduler resolves it to a live Mesh at engine build
+        if self.mesh is not None and self.mesh < 1:
+            bad(f"mesh must be None or a device count >= 1, got {self.mesh}")
         # registry-keyed fields: fail now, with the registered names in the
         # message, instead of deep inside the engine build
         from repro.fed import registry as reg

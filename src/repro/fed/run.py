@@ -12,6 +12,11 @@ the fully resolved spec as JSON without running, so
 bootstraps a spec file you can edit and feed back in. ``--set`` takes
 dotted keys into the spec (``fl.*``, ``model.kw.*``, ...); values parse as
 JSON when possible, else as strings.
+
+Multi-device client parallelism rides the same knobs: ``--set
+fl.scheduler=sharded --set fl.mesh=4`` runs each chunk's clients
+data-parallel on a 4-device client mesh (force host devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` on CPU).
 """
 from __future__ import annotations
 

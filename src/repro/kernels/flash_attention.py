@@ -63,9 +63,15 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, s_ref, acc_ref, *,
                    static_argnames=("causal", "window", "interpret"))
 def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            causal: bool = True, window=None,
-                           interpret: bool = True):
+                           interpret=None):
     """q: (BH, Tq, hd); k, v: (BH, Tk, hd) — heads pre-flattened/broadcast.
-    Returns (BH, Tq, hd) in q.dtype."""
+    Returns (BH, Tq, hd) in q.dtype.
+
+    ``interpret=None`` auto-detects the backend (compiled Mosaic on TPU,
+    interpreter elsewhere), matching the ``ops.py`` wrappers."""
+    if interpret is None:
+        from repro.kernels.ops import _default_interpret
+        interpret = _default_interpret()
     BH, Tq, hd = q.shape
     Tk = k.shape[1]
     bq = min(BQ, Tq)

@@ -11,6 +11,7 @@ output block is well-defined).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,9 +41,17 @@ def _proj_kernel(g_ref, l_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def lbgm_projection_pallas(g: jax.Array, l: jax.Array,
-                           interpret: bool = True):
+                           interpret: Optional[bool] = None):
     """g, l: flat 1-D arrays (any float dtype), same length.
-    Returns (gl, gg, ll) fp32 scalars."""
+    Returns (gl, gg, ll) fp32 scalars.
+
+    ``interpret=None`` auto-detects the backend (compiled Mosaic on TPU,
+    interpreter elsewhere) — same policy as the ``ops.py`` wrappers, so
+    direct callers no longer silently run the interpreter on real TPUs.
+    """
+    if interpret is None:
+        from repro.kernels.ops import _default_interpret
+        interpret = _default_interpret()
     assert g.ndim == 1 and g.shape == l.shape
     n = g.shape[0]
     tile = BLOCK_R * LANES

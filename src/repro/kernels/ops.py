@@ -1,8 +1,10 @@
 """jit'd public wrappers around the Pallas kernels.
 
-``interpret`` defaults to True unless a real TPU backend is present — the
-container validates kernel bodies on CPU; on TPU the same calls compile to
-Mosaic.
+``interpret`` defaults to ``None`` -> :func:`_default_interpret` backend
+auto-detection (interpreter on CPU where the container validates kernel
+bodies, compiled Mosaic on real TPUs). The raw ``*_pallas`` entry points in
+the kernel modules share the same ``None`` default, so callers that bypass
+these wrappers get compiled execution on TPU too.
 """
 from __future__ import annotations
 

@@ -53,8 +53,14 @@ def _rwkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def rwkv6_scan_pallas(r, k, v, logw, u, interpret: bool = True):
-    """r,k,v,logw: (BH, T, hd); u: (BH, hd). Returns fp32 (BH, T, hd)."""
+def rwkv6_scan_pallas(r, k, v, logw, u, interpret=None):
+    """r,k,v,logw: (BH, T, hd); u: (BH, hd). Returns fp32 (BH, T, hd).
+
+    ``interpret=None`` auto-detects the backend (compiled Mosaic on TPU,
+    interpreter elsewhere), matching the ``ops.py`` wrappers."""
+    if interpret is None:
+        from repro.kernels.ops import _default_interpret
+        interpret = _default_interpret()
     BH, T, hd = r.shape
     c = min(CHUNK, T)
     assert T % c == 0

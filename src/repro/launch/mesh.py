@@ -2,6 +2,8 @@
 this module must not touch jax device state)."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import numpy as np
 from jax.sharding import Mesh
@@ -27,3 +29,24 @@ def make_debug_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Small mesh over whatever devices exist (tests/examples)."""
     devices = jax.devices()[: data * model]
     return Mesh(np.asarray(devices).reshape(data, model), ("data", "model"))
+
+
+def make_client_mesh(num_devices: Optional[int] = None,
+                     axis: str = "clients") -> Mesh:
+    """1-D mesh for client-data-parallel FL rounds (``scheduler="sharded"``).
+
+    ``num_devices=None`` takes every local device; an explicit count must
+    not exceed what this process can see. This is the resolver behind
+    ``FLConfig.mesh`` — the config stores the device count (plain JSON-able
+    int), the scheduler turns it into a live Mesh here.
+    """
+    devices = jax.devices()
+    n = len(devices) if num_devices is None else num_devices
+    if n < 1:
+        raise ValueError(f"client mesh needs >= 1 device, got {n}")
+    if n > len(devices):
+        raise RuntimeError(
+            f"need {n} devices for the client mesh, have {len(devices)}; "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            "BEFORE importing jax (launch/dryrun.py does this)")
+    return Mesh(np.asarray(devices[:n]), (axis,))

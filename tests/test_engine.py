@@ -198,6 +198,7 @@ def _assert_identical_run(fl_a, fl_b, rounds=3):
     assert ha == hb  # metrics bit-for-bit, every round
 
 
+@pytest.mark.slow
 def test_chunked_equals_vmap_100_clients(fcn_setup):
     """Acceptance: numerically identical params/metrics on a 100-client
     paper_fcn run."""
@@ -250,6 +251,25 @@ def test_chunked_equals_vmap_with_pipeline_and_sampling(fcn_setup):
     _assert_identical_run(fl_v, fl_c, rounds=4)
 
 
+def test_chunked_padded_tail_with_sampling_and_ef(fcn_setup):
+    """Prime K (zero-weight padded tail block) combined with
+    Algorithm-3 sampling AND error feedback: the phantom clients' residual
+    rows must stay out of every code path."""
+    kw = dict(use_lbgm=True, delta_threshold=0.3, compressor="topk",
+              compressor_kw={"k_frac": 0.1}, error_feedback=True,
+              sample_frac=0.6)
+    fl_v = make_engine(fcn_setup, K=7, scheduler="vmap", **kw)
+    fl_c = make_engine(fcn_setup, K=7, scheduler="chunked", chunk_size=4,
+                       **kw)
+    assert fl_c._chunk == 4 and fl_c._pad == 1
+    _assert_identical_run(fl_v, fl_c, rounds=4)
+    # the phantom pad row of the residual bank never accumulates anything
+    for leaf in jax.tree.leaves(fl_c.residual):
+        np.testing.assert_array_equal(np.asarray(leaf[-1]),
+                                      np.zeros_like(leaf[-1]))
+
+
+@pytest.mark.slow
 def test_chunked_equals_vmap_topk_store(fcn_setup):
     """Equivalence with the sparse LBG bank."""
     kw = dict(use_lbgm=True, delta_threshold=0.5, lbg_variant="topk",
@@ -321,6 +341,18 @@ def test_unknown_scheduler_rejected(fcn_setup):
         make_engine(fcn_setup, K=4, scheduler="warp")
 
 
+def test_empty_client_rejected_with_actionable_error(fcn_setup):
+    """A starved partition (possible when label-skew demand > supply) must
+    fail at engine construction with the offending clients named, not deep
+    inside batch sampling as rng.randint(0, 0)."""
+    params, x, y, loss_fn = fcn_setup
+    data = [{"x": x[:5], "y": y[:5]},
+            {"x": x[:0], "y": y[:0]},
+            {"x": x[5:9], "y": y[5:9]}]
+    with pytest.raises(ValueError, match=r"clients \[1\] have no training"):
+        FLEngine(loss_fn, params, data, FLConfig(num_clients=3))
+
+
 # ----------------------------------------- (c) uplink accounting
 
 
@@ -361,3 +393,67 @@ def test_metrics_keys_and_history_accumulation(fcn_setup):
         assert k in m
     assert fl.history[-1] is m
     assert m["total_uplink"] == pytest.approx(m["uplink_floats"])
+
+
+def test_engine_accounting_unified_on_comm_ledger(fcn_setup):
+    """The engine's uplink accounting is the CommLedger — one source of
+    truth, no hand-rolled duplicate counters (ISSUE 3 accounting drift)."""
+    from repro.comm.accounting import CommLedger
+    fl = make_engine(fcn_setup, K=4, use_lbgm=True, delta_threshold=0.2)
+    assert isinstance(fl.ledger, CommLedger)
+    rng = np.random.RandomState(0)
+    for _ in range(3):
+        m = fl.run_round(rng)
+    assert fl.ledger.rounds == 3 and len(fl.ledger.per_round) == 3
+    # history fields ARE ledger fields
+    assert m["total_uplink"] == fl.ledger.uplink_floats
+    assert m["vanilla_uplink"] == fl.ledger.vanilla_floats
+    assert m["savings"] == fl.ledger.savings
+    # engine-level views derive from the ledger
+    assert fl.total_uplink == fl.ledger.uplink_floats
+    assert fl.vanilla_uplink == fl.ledger.vanilla_floats
+    assert m["uplink_floats"] == pytest.approx(
+        fl.ledger.per_round[-1]["uplink"])
+    # pre-run: the ledger's 0/0 guard reports zero savings (the old
+    # hand-rolled max(vanilla, 1.0) guard disagreed with it)
+    assert CommLedger().savings == 0.0
+
+
+# ----------------------------------------- (d) round RNG stream hygiene
+
+
+def test_empty_cohort_fallback_preserves_rng_stream(fcn_setup):
+    """The empty-mask fallback must not consume extra RNG state: a config
+    that hits one unlucky round would otherwise diverge from its sibling
+    on every later round's batch/mask stream (ISSUE 3 RNG perturbation)."""
+    # sample_frac so small every draw comes up empty -> fallback each round
+    fl = make_engine(fcn_setup, K=5, use_lbgm=True, sample_frac=1e-12)
+    rng = np.random.RandomState(7)
+    ref = np.random.RandomState(7)
+    u = ref.rand(5)
+    mask = fl._sample_mask(rng)
+    # fallback picked exactly one client: the one closest to its threshold
+    assert mask.sum() == 1.0 and mask[int(np.argmin(u))] == 1.0
+    # ...and consumed exactly num_clients uniforms: streams stay in lockstep
+    np.testing.assert_array_equal(rng.rand(8), ref.rand(8))
+    # sample_frac == 1 consumes nothing
+    fl_full = make_engine(fcn_setup, K=5, use_lbgm=True)
+    rng2 = np.random.RandomState(7)
+    assert fl_full._sample_mask(rng2).sum() == 5.0
+    np.testing.assert_array_equal(rng2.rand(3),
+                                  np.random.RandomState(7).rand(3))
+
+
+def test_sampled_and_unsampled_runs_share_batch_stream(fcn_setup):
+    """Two engines differing only in whether round 1 hit the empty-cohort
+    fallback draw identical batches for round 2 (stream invariance
+    end-to-end, not just in _sample_mask)."""
+    fl_a = make_engine(fcn_setup, K=5, use_lbgm=True, sample_frac=1e-12)
+    fl_b = make_engine(fcn_setup, K=5, use_lbgm=True, sample_frac=0.99)
+    rng_a, rng_b = np.random.RandomState(3), np.random.RandomState(3)
+    fl_a.run_round(rng_a)   # fallback path
+    fl_b.run_round(rng_b)   # normal path
+    ba = fl_a._sample_batches(rng_a)
+    bb = fl_b._sample_batches(rng_b)
+    for k in ba:
+        np.testing.assert_array_equal(np.asarray(ba[k]), np.asarray(bb[k]))

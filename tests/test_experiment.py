@@ -67,6 +67,7 @@ def test_spec_from_dict_rejects_unknown_fields():
         FLConfig.from_dict({"delta": 0.2})
 
 
+@pytest.mark.slow
 def test_json_reload_reproduces_history():
     """Acceptance: a spec serialized to JSON and reloaded reproduces the
     same history on the same seed."""
@@ -99,8 +100,9 @@ def test_registry_duplicate_and_unknown_errors():
 
 
 def test_builtin_registries_populated():
-    assert {"vmap", "chunked"} <= set(reg.SCHEDULERS.names())
-    assert {"dense", "topk", "null"} <= set(reg.LBG_STORES.names())
+    assert {"vmap", "chunked", "sharded"} <= set(reg.SCHEDULERS.names())
+    assert {"dense", "topk", "topk-sharded", "null"} \
+        <= set(reg.LBG_STORES.names())
     assert {"none", "topk", "atomo", "signsgd"} <= \
         set(reg.COMPRESSORS.names())
     assert {"fcn", "cnn"} <= set(reg.MODELS.names())

@@ -95,3 +95,27 @@ def test_noniid_partition_properties():
     assert len(parts) == 8
     for p in parts:
         assert len(set(y[p])) <= 3 and len(p) > 0
+
+
+@pytest.mark.parametrize("num_clients,seed", [(8, 0), (30, 1), (100, 2)])
+def test_label_skew_shards_disjoint_and_covering(num_clients, seed):
+    """Regression (ISSUE 3): the old `per` formula + wraparound pointer
+    handed the same samples to multiple clients and left others unassigned.
+    Client shards must be pairwise disjoint, and every class somebody drew
+    must be fully dealt out across its takers."""
+    _, y = mixture_classification(1500, 10, seed=3)
+    parts = partition_label_skew(y, num_clients, 3, seed=seed)
+    allidx = np.concatenate(parts)
+    # pairwise disjoint: no index appears in two client shards
+    assert len(allidx) == len(np.unique(allidx))
+    # full coverage: every sample of every drawn class is assigned
+    drawn_classes = set()
+    for p in parts:
+        drawn_classes.update(np.unique(y[p]).tolist())
+    assigned = np.zeros(len(y), bool)
+    assigned[allidx] = True
+    for c in drawn_classes:
+        assert assigned[y == c].all(), f"class {c} not fully dealt out"
+    # cohort demand <= supply here (150 samples/class): nobody is empty
+    for p in parts:
+        assert len(p) > 0 and len(set(y[p])) <= 3

@@ -19,6 +19,31 @@ def test_lbgm_projection_sweep(key, n, dtype):
                                rtol=5e-3 if dtype == jnp.bfloat16 else 1e-4)
 
 
+def test_raw_entry_points_default_interpret_to_backend_autodetect(key):
+    """Regression (ISSUE 3): the raw ``*_pallas`` entry points hard-coded
+    ``interpret=True``, silently running the interpreter on real TPUs for
+    any caller bypassing ops.py. They must default to None -> backend
+    auto-detection, same policy as the ops wrappers."""
+    import inspect
+
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.kernels.lbgm_projection import lbgm_projection_pallas
+    from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
+
+    for fn in (lbgm_projection_pallas, flash_attention_pallas,
+               rwkv6_scan_pallas):
+        sig = inspect.signature(fn)
+        assert sig.parameters["interpret"].default is None, fn
+    # the auto default matches an explicit interpret on this backend
+    g = jax.random.normal(key, (4096,))
+    l = jax.random.normal(jax.random.fold_in(key, 1), (4096,))
+    auto = lbgm_projection_pallas(g, l)
+    explicit = lbgm_projection_pallas(g, l,
+                                      interpret=ops._default_interpret())
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(explicit))
+    assert ops._default_interpret() == (jax.default_backend() != "tpu")
+
+
 def test_lbgm_projection_pytree(key):
     g = {"a": jax.random.normal(key, (100,)),
          "b": jax.random.normal(jax.random.fold_in(key, 1), (3, 7))}
