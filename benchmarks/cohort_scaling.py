@@ -7,13 +7,29 @@ size K over all three (sharded on whatever devices the process sees —
 force more with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)
 and reports per-round wall time plus the round's uplink savings so the
 accounting can be eyeballed for scheduler-independence.
+
+The ``scalar_rounds`` section is the ISSUE-4 acceptance measurement: on
+scalar-heavy rounds (delta=1, the paper's steady state — every
+post-refresh round recycles) it times the SAME experiment under the
+legacy dense-scatter aggregation (``fused_kernels=False``) and the sparse
+scalar-round aggregation (default), chunked and sharded, and emits the
+speedup. Warm-up rounds (jit compile + the round-0 LBG refresh) are
+excluded; host prep is prefetched, so the number is steady-state device
+time per round. tau/batch are kept small and the FCN widened so the
+round is aggregation- rather than local-SGD-bound — the quantity this
+section exists to measure.
 """
 from __future__ import annotations
 
-from benchmarks.common import build_spec, emit
+import time
+
+from benchmarks.common import build_spec, emit, record_bench
 
 
-def run(rounds: int = 3, cohorts=(32, 128), chunk_size: int = 8) -> None:
+def run(rounds: int = 3, cohorts=(32, 128), chunk_size: int = 8,
+        scalar_cohorts=(128,), scalar_rounds: int = 6,
+        scalar_warmup: int = 2, scalar_d_model: int = 512,
+        scalar_chunk: int = 16, scalar_k_frac: float = 0.01) -> None:
     import jax
 
     from repro.fed import run_experiment
@@ -31,7 +47,76 @@ def run(rounds: int = 3, cohorts=(32, 128), chunk_size: int = 8) -> None:
                               name=f"cohort-{sched}-K{K}", **flkw)
             result = run_experiment(spec, rounds)
             emit(f"cohort_scaling/{sched}/K{K}", result.us_per_round,
-                 f"savings={result.savings:.3f};n_dev={n_dev}")
+                 f"savings={result.savings:.3f};n_dev={n_dev}",
+                 K=K, scheduler=sched, n_dev=n_dev)
+    for K in scalar_cohorts:
+        scalar_round_comparison(K, scalar_chunk, scalar_rounds,
+                                scalar_warmup, scalar_d_model, n_dev,
+                                k_frac=scalar_k_frac)
+
+
+def _time_scalar_rounds(spec, rounds: int, warmup: int) -> float:
+    """Steady-state us/round: warm-up (compile + LBG refresh) excluded,
+    host prep prefetched so only device round time is on the clock."""
+    import numpy as np
+
+    from repro.fed.experiment import build_experiment
+
+    engine, _ = build_experiment(spec)
+    rng = np.random.RandomState(spec.fl.seed + 1)
+    src = engine.prefetcher(rng)
+    try:
+        for _ in range(warmup):
+            engine.run_round(src)
+        t0 = time.time()
+        for _ in range(rounds):
+            m = engine.run_round(src)
+        elapsed = time.time() - t0
+    finally:
+        src.close()
+    assert m["frac_scalar"] == 1.0, "scalar-heavy config must recycle"
+    return elapsed / max(rounds, 1) * 1e6
+
+
+def scalar_round_comparison(K: int, chunk_size: int, rounds: int,
+                            warmup: int, d_model: int, n_dev: int,
+                            k_frac: float = 0.01) -> None:
+    """dense-scatter (the pre-PR path, ``fused_kernels=False``: per-client
+    dense g_tilde scatter, O(M) sequential accumulation, full padded-block
+    decision) vs the default sparse scalar-round aggregation, on
+    all-recycle rounds. ``k_frac=0.01`` is the App-C.1 LBG-compression
+    density of the large-model regime the ROADMAP targets — the setting
+    where "work proportional to what the round transmits" matters most."""
+    for sched in ("chunked", "sharded"):
+        flkw = dict(scheduler=sched, use_lbgm=True, delta_threshold=1.0,
+                    chunk_size=chunk_size, lbg_variant="topk",
+                    lbg_kw={"k_frac": k_frac})
+        if sched == "sharded":
+            flkw.update(mesh=n_dev, lbg_variant="topk-sharded")
+        us = {}
+        for label, fused in (("dense", False), ("sparse", None)):
+            spec = build_spec(
+                num_clients=K, n_data=4 * K * 8, tau=1, batch_size=8,
+                model_kw={"d_model": d_model}, fused_kernels=fused,
+                name=f"scalar-{sched}-K{K}-{label}", **flkw)
+            us[label] = _time_scalar_rounds(spec, rounds, warmup)
+            emit(f"cohort_scaling/scalar_rounds/{sched}/K{K}/{label}",
+                 us[label],
+                 f"delta=1.0 d_model={d_model} k_frac={k_frac} tau=1 "
+                 f"n_dev={n_dev} fused_kernels={fused}",
+                 K=K, scheduler=sched, path=label, d_model=d_model,
+                 k_frac=k_frac, n_dev=n_dev)
+        # the ratio row reports the ratio itself (not a time): CSV + JSON
+        # are written directly so the us_per_round field isn't abused
+        ratio = us["dense"] / max(us["sparse"], 1e-9)
+        name = f"cohort_scaling/scalar_rounds/{sched}/K{K}/speedup"
+        derived = (f"dense_us={us['dense']:.0f} "
+                   f"sparse_us={us['sparse']:.0f} "
+                   f"speedup={ratio:.2f}x (acceptance: >=1.3x; row value "
+                   "is the dense/sparse ratio, not a time)")
+        print(f"{name},{ratio:.2f},{derived}")
+        record_bench(name, ratio, {"derived": derived, "K": K,
+                                   "scheduler": sched, "speedup": ratio})
 
 
 if __name__ == "__main__":

@@ -4,18 +4,38 @@ Every figure benchmark describes its run as an
 :class:`~repro.fed.experiment.ExperimentSpec` (via :func:`build_spec`) and
 executes it with ``repro.fed.run_experiment`` / ``sweep`` — no hand-wired
 ``FLEngine`` construction.
+
+:func:`emit` prints the human-readable ``name,us,derived`` CSV row AND
+appends a structured entry to the ``BENCH_engine.json`` trajectory file
+(name, us_per_round, metadata, git rev, timestamp), so perf numbers from
+different revisions are diffable instead of living only in CI logs. Set
+``BENCH_ENGINE_PATH`` to redirect the file (CI uploads it as an artifact).
 """
 from __future__ import annotations
+
+import functools
+import json
+import os
+import subprocess
+import time
+from typing import Any, Dict, Optional
+
+#: trajectory file every benchmark appends to (one JSON array)
+BENCH_PATH_ENV = "BENCH_ENGINE_PATH"
+BENCH_PATH_DEFAULT = "BENCH_engine.json"
 
 
 def build_spec(num_clients=20, tau=2, lr=0.05, batch_size=16, seed=0,
                noniid=True, n_data=2000, n_eval=500, name="benchmark",
-               **flkw):
+               model_kw: Optional[Dict[str, Any]] = None, **flkw):
     """Paper-style FL experiment spec: FCN classifier on synthetic mixture
     data, non-iid label-skew split by default.
 
     Extra **flkw go straight into FLConfig — e.g. scheduler="chunked",
-    chunk_size=32 for the memory-bounded large-cohort path.
+    chunk_size=32 for the memory-bounded large-cohort path;
+    fused_kernels=False pins the legacy dense aggregation path.
+    ``model_kw`` passes arch overrides to the model component (e.g.
+    {"d_model": 512} to scale the FCN width).
     """
     from repro.fed import ComponentSpec, EvalPolicy, ExperimentSpec, FLConfig
 
@@ -24,7 +44,7 @@ def build_spec(num_clients=20, tau=2, lr=0.05, batch_size=16, seed=0,
                  if noniid else ComponentSpec("iid", {"seed": seed}))
     return ExperimentSpec(
         name=name,
-        model=ComponentSpec("fcn"),
+        model=ComponentSpec("fcn", dict(model_kw or {})),
         data=ComponentSpec("mixture",
                            {"n": n_data, "n_eval": n_eval, "seed": seed}),
         partition=partition,
@@ -34,5 +54,49 @@ def build_spec(num_clients=20, tau=2, lr=0.05, batch_size=16, seed=0,
     )
 
 
-def emit(name: str, us_per_call: float, derived: str):
+@functools.lru_cache(maxsize=1)
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def bench_path() -> str:
+    return os.environ.get(BENCH_PATH_ENV, BENCH_PATH_DEFAULT)
+
+
+def record_bench(name: str, us_per_round: float,
+                 metadata: Optional[Dict[str, Any]] = None) -> None:
+    """Append one entry to the BENCH_engine.json trajectory array."""
+    path = bench_path()
+    entries = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                entries = json.load(f)
+            if not isinstance(entries, list):
+                entries = []
+        except (OSError, ValueError):
+            entries = []
+    entries.append({
+        "name": name,
+        "us_per_round": float(us_per_round),
+        "metadata": dict(metadata or {}),
+        "git_rev": _git_rev(),
+        "timestamp": time.time(),
+    })
+    with open(path, "w") as f:
+        json.dump(entries, f, indent=1)
+        f.write("\n")
+
+
+def emit(name: str, us_per_call: float, derived: str,
+         **metadata: Any) -> None:
+    """CSV row to stdout + structured entry to BENCH_engine.json."""
     print(f"{name},{us_per_call:.0f},{derived}")
+    record_bench(name, us_per_call, {"derived": derived, **metadata})

@@ -1,6 +1,14 @@
-"""Kernel micro-benchmarks: Pallas (interpret) vs jnp oracle wall-time, plus
-the fused-projection HBM-pass arithmetic (the TPU-side win is structural:
-one pass instead of three)."""
+"""Kernel micro-benchmarks for the fused LBGM decision hot path.
+
+Times the XLA 3-pass oracle AND the fused Pallas kernels — each row is a
+real wall-time measurement of the thing it names (an earlier revision
+reported the XLA timing under the Pallas row; see BENCH_engine.json for
+the honest trajectory). On CPU the Pallas rows run the interpreter, so
+they are expected to be SLOWER than XLA — the fused win is structural
+(one HBM pass instead of three) and lands on TPU, where the same calls
+compile to Mosaic; the XLA row is the portable fallback the engine uses
+when ``FLConfig.fused_kernels`` resolves off.
+"""
 from __future__ import annotations
 
 import time
@@ -21,20 +29,51 @@ def _time(fn, *args, iters=5):
     return (time.time() - t0) / iters * 1e6
 
 
-def run(n=1 << 20):
+def run(n: int = 1 << 20, batch: int = 8, iters: int = 5):
     key = jax.random.PRNGKey(0)
     g = {"x": jax.random.normal(key, (n,))}
     l = {"x": jax.random.normal(jax.random.fold_in(key, 1), (n,))}
+    backend = jax.default_backend()
+    interp = ops._default_interpret()
+    mode = "interpret" if interp else "mosaic"
 
     us_ref = _time(jax.jit(lambda a, b: (tree_vdot(a, b), tree_sq_norm(a),
-                                         tree_sq_norm(b))), g, l)
+                                         tree_sq_norm(b))), g, l,
+                   iters=iters)
     emit("lbgm_projection_xla_3pass", us_ref,
-         f"n={n} hbm_passes=3 (2 vectors read, 3 reductions)")
-    emit("lbgm_projection_pallas_fused", us_ref,
-         f"n={n} hbm_passes=1 derived_speedup~3x_memory_bound "
-         "(validated interpret=True; wall-time is TPU-only)")
-    return us_ref
+         f"n={n} hbm_passes=3 (2 vectors read, 3 reductions)",
+         n=n, backend=backend)
+
+    us_pallas = _time(jax.jit(lambda a, b: ops.lbgm_projection(a, b)), g, l,
+                      iters=iters)
+    emit("lbgm_projection_pallas_fused", us_pallas,
+         f"n={n} hbm_passes=1 mode={mode} "
+         f"xla_3pass_us={us_ref:.0f} (fused win is TPU-structural; the "
+         "interpreter row only validates the kernel)",
+         n=n, backend=backend, mode=mode, xla_3pass_us=us_ref)
+
+    # batched kernel: the schedulers' client axis on grid dim 0
+    gb = jax.random.normal(key, (batch, n // batch))
+    lb = jax.random.normal(jax.random.fold_in(key, 2), (batch, n // batch))
+    us_vmap_ref = _time(
+        jax.jit(jax.vmap(lambda a, b: (jnp.vdot(a, b), jnp.vdot(a, a),
+                                       jnp.vdot(b, b)))), gb, lb,
+        iters=iters)
+    emit("lbgm_projection_xla_3pass_batched", us_vmap_ref,
+         f"B={batch} n={n // batch} hbm_passes=3",
+         n=n // batch, batch=batch, backend=backend)
+    from repro.kernels.lbgm_projection import lbgm_projection_batched_pallas
+    us_batched = _time(
+        jax.jit(lambda a, b: lbgm_projection_batched_pallas(a, b)), gb, lb,
+        iters=iters)
+    emit("lbgm_projection_pallas_fused_batched", us_batched,
+         f"B={batch} n={n // batch} hbm_passes=1 mode={mode} "
+         f"xla_us={us_vmap_ref:.0f}",
+         n=n // batch, batch=batch, backend=backend, mode=mode,
+         xla_3pass_us=us_vmap_ref)
+    return us_ref, us_pallas
 
 
 if __name__ == "__main__":
+    import benchmarks  # noqa: F401  (src/ path bootstrap)
     run()

@@ -17,6 +17,11 @@ def main() -> None:
                     help="comma list: fig1,fig5,fig6,fig7,fig8,kernels,"
                          "cohort")
     ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--toy", action="store_true",
+                    help="tiny problem sizes (CI smoke): small kernel "
+                         "vectors, small cohorts, narrow model — exercises "
+                         "every code path incl. the BENCH_engine.json "
+                         "trajectory, makes no perf claims")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
@@ -41,10 +46,18 @@ def main() -> None:
         fig8_signsgd.run(rounds=args.rounds)
     if on("kernels"):
         from benchmarks import kernel_bench
-        kernel_bench.run()
+        if args.toy:
+            kernel_bench.run(n=1 << 16, batch=4, iters=2)
+        else:
+            kernel_bench.run()
     if on("cohort"):
         from benchmarks import cohort_scaling
-        cohort_scaling.run(rounds=min(args.rounds, 5))
+        if args.toy:
+            cohort_scaling.run(rounds=2, cohorts=(8,), chunk_size=4,
+                               scalar_cohorts=(8,), scalar_rounds=2,
+                               scalar_warmup=2, scalar_d_model=64)
+        else:
+            cohort_scaling.run(rounds=min(args.rounds, 5))
 
 
 if __name__ == '__main__':

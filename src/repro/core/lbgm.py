@@ -41,23 +41,37 @@ class LBGMStats(NamedTuple):
     grad_sq_norm: jax.Array
 
 
-def lbgm_stats(grad, lbg) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """(sin2, rho, gg). Degenerate LBG (zero) forces a full-gradient round."""
-    gl = tree_vdot(grad, lbg)
-    gg = tree_sq_norm(grad)
-    ll = tree_sq_norm(lbg)
+def lbgm_stats(grad, lbg, fused: bool = False
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(sin2, rho, gg). Degenerate LBG (zero) forces a full-gradient round.
+
+    ``fused=True`` computes the three O(M) reductions (<g,l>, ||g||^2,
+    ||l||^2) with the one-pass Pallas projection kernel
+    (``kernels.ops.lbgm_projection``; batched over the client axis under
+    ``vmap``) instead of three separate XLA passes — numerically equal
+    within fp32 reassociation tolerance.
+    """
+    if fused:
+        from repro.kernels.ops import lbgm_projection
+        gl, gg, ll = lbgm_projection(grad, lbg)
+    else:
+        gl = tree_vdot(grad, lbg)
+        gg = tree_sq_norm(grad)
+        ll = tree_sq_norm(lbg)
     cos2 = (gl * gl) / jnp.maximum(gg * ll, EPS)
     sin2 = jnp.where(ll > EPS, 1.0 - cos2, 1.0)
     rho = gl / jnp.maximum(ll, EPS)
     return sin2, rho, gg
 
 
-def lbgm_client_step(grad, lbg, delta_threshold):
+def lbgm_client_step(grad, lbg, delta_threshold, fused: bool = False):
     """Paper Algorithm 1, worker side (variant='full').
 
     Returns (g_tilde as seen by the server, new_lbg, LBGMStats).
+    ``fused`` routes the projection statistics through the one-pass Pallas
+    kernel (see :func:`lbgm_stats`).
     """
-    sin2, rho, gg = lbgm_stats(grad, lbg)
+    sin2, rho, gg = lbgm_stats(grad, lbg, fused=fused)
     # sin2 == 1.0 covers both degenerate LBGs (round 0) and orthogonal
     # gradients — either way a full round is strictly better.
     scalar = (sin2 <= delta_threshold) & (sin2 < 1.0)
@@ -101,21 +115,49 @@ def _to_blocks(g: jax.Array, nb: int, block: int) -> jax.Array:
     return flat.reshape(nb, block)
 
 
-def leaf_topk(g: jax.Array, k_frac: float):
+def leaf_topk(g: jax.Array, k_frac: float, trim_pad: bool = False):
     """Block-wise top-|.|: returns ({'idx': (nb,kb) block-local int32,
-    'val': (nb,kb) f32})."""
+    'val': (nb,kb) f32}).
+
+    ``trim_pad=True`` (the engine's fused/sparse hot path): ``_block_layout``
+    rounds nb up to a multiple of 16 for model-axis sharding, so rows past
+    the data are entirely zero padding; top_k on an all-zero row is exactly
+    (iota, zeros) (ties keep the lower index), so those rows are emitted
+    directly instead of paying the selection — the decision's dominant cost
+    on multi-block leaves. Bit-identical values; ``False`` keeps the
+    original full-layout graph (the ``fused_kernels=False`` oracle).
+    """
     nb, block, kb = _block_layout(g.size, k_frac)
-    blocks = _to_blocks(g, nb, block)
+    live = -(-g.size // block)      # rows containing any real data
+    if not trim_pad:
+        live = nb
+    blocks = _to_blocks(g, live, block)
     _, idx = jax.lax.top_k(jnp.abs(blocks), kb)
     vals = jnp.take_along_axis(blocks, idx, axis=1)
+    if live < nb:
+        idx = jnp.concatenate(
+            [idx, jnp.broadcast_to(jnp.arange(kb), (nb - live, kb))])
+        vals = jnp.concatenate([vals, jnp.zeros((nb - live, kb), vals.dtype)])
     return {"idx": idx.astype(jnp.int32), "val": vals}
 
 
-def leaf_sparse_gather(g: jax.Array, sparse, k_frac: float) -> jax.Array:
-    """g.flat values at the sparse entry positions -> (nb, kb) f32."""
+def leaf_sparse_gather(g: jax.Array, sparse, k_frac: float,
+                       trim_pad: bool = False) -> jax.Array:
+    """g.flat values at the sparse entry positions -> (nb, kb) f32.
+
+    ``trim_pad=True`` (like :func:`leaf_topk`): rows past the data gather
+    from pure zero padding, so their values are emitted as exact zeros
+    without materializing the padded block rows — bit-identical, and the
+    row order (hence any downstream reduction order) is unchanged.
+    """
     nb, block, _ = _block_layout(g.size, k_frac)
-    blocks = _to_blocks(g, nb, block)
-    return jnp.take_along_axis(blocks, sparse["idx"], axis=1)
+    live = -(-g.size // block) if trim_pad else nb
+    blocks = _to_blocks(g, live, block)
+    gv = jnp.take_along_axis(blocks, sparse["idx"][:live], axis=1)
+    if live < nb:
+        gv = jnp.concatenate(
+            [gv, jnp.zeros((nb - live,) + gv.shape[1:], gv.dtype)])
+    return gv
 
 
 def leaf_scatter(sparse, shape, size: int, k_frac: float,
@@ -143,7 +185,7 @@ def init_topk_lbg(params_like, k_frac: float) -> Dict[str, Dict[str, jax.Array]]
 
 def topk_step_core(grad: Dict[str, jax.Array], lbg, delta_threshold,
                    k_frac: float, *, corr=None, psum_axes=None,
-                   out_dtypes=False):
+                   out_dtypes=False, sparse_out=False, fused=False):
     """Shared body of the sparse-LBG Algorithm-1 step.
 
     grad: flat dict of dense leaves. lbg: flat dict of {idx, val}.
@@ -153,19 +195,52 @@ def topk_step_core(grad: Dict[str, jax.Array], lbg, delta_threshold,
     shard_map variant (repro.core.lbgm_sharded), which calls this on
     device-local shards. out_dtypes=True scatters g_tilde in each leaf's own
     dtype instead of fp32.
+
+    ``fused=True`` replaces the three dense passes over each leaf (sparse
+    gather, ||g||^2, block-wise top-k) with ONE pass through the fused
+    Pallas kernel ``kernels.ops.lbgm_sparse_decision`` (batched over the
+    client axis under ``vmap``); fp32-reassociation-equal to the default.
+
+    ``sparse_out=True`` skips the dense ``leaf_scatter`` of g_tilde and
+    instead returns ``((send, gscale), new_lbg, stats)`` where ``send`` is
+    the per-leaf sparse {idx, val} payload carrying RAW values (the LBG's
+    values on a recycle round, the fresh top-k values on a full round) and
+    ``gscale`` is the scalar the server must fold in (``rho`` on a recycle
+    round, ``1.0`` on a full round). This is the engine's sparse
+    scalar-round aggregation contract: the aggregate contribution of client
+    k is ``(w_k * gscale_k) * send_k`` scatter-added at ``send.idx`` — work
+    proportional to what the round transmits, never O(M) per client.
     """
-    # projection stats: dense g against sparse lbg
+    # projection stats: dense g against sparse lbg — in fused mode the
+    # gather, the squared norm, and the top-k candidates all come from one
+    # read of g per leaf
+    if fused:
+        from repro.kernels.ops import lbgm_sparse_decision
+    # sparse_out (the engine's sparse-aggregation mode) also unlocks the
+    # bit-identical pad-row trims in leaf_topk/leaf_sparse_gather; the
+    # plain dense-scatter mode keeps the exact legacy graph so
+    # fused_kernels=False stays a faithful pre-optimization oracle
+    trim = sparse_out or fused
     gl = jnp.zeros((), jnp.float32)
     ll = jnp.zeros((), jnp.float32)
     gg = jnp.zeros((), jnp.float32)
+    fresh = {}
     for name, g in grad.items():
         sl = lbg[name]
-        gv = leaf_sparse_gather(g, sl, k_frac)
+        if fused:
+            nb, block, _ = _block_layout(g.size, k_frac)
+            blocks = _to_blocks(g, nb, block)
+            gg_leaf, gv, ti, tv = lbgm_sparse_decision(blocks, sl["idx"])
+            fresh[name] = {"idx": ti, "val": tv}
+        else:
+            gv = leaf_sparse_gather(g, sl, k_frac, trim_pad=trim)
+            flat = g.reshape(-1).astype(jnp.float32)
+            gg_leaf = jnp.vdot(flat, flat)
+            fresh[name] = None  # computed below, preserving legacy op order
         c = 1.0 if corr is None else 1.0 / corr[name]
         gl += c * jnp.vdot(gv, sl["val"])
         ll += c * jnp.vdot(sl["val"], sl["val"])
-        flat = g.reshape(-1).astype(jnp.float32)
-        gg += c * jnp.vdot(flat, flat)
+        gg += c * gg_leaf
     if psum_axes is not None:
         gl = jax.lax.psum(gl, psum_axes)
         ll = jax.lax.psum(ll, psum_axes)
@@ -180,29 +255,40 @@ def topk_step_core(grad: Dict[str, jax.Array], lbg, delta_threshold,
     for name, g in grad.items():
         sl = lbg[name]
         total_k += sl["idx"].size
-        new = leaf_topk(g, k_frac)
-        # scalar round: rho * dense(lbg); full round: dense(topk(g))
-        send = {"idx": jnp.where(scalar, sl["idx"], new["idx"]),
-                "val": jnp.where(scalar, rho * sl["val"], new["val"])}
-        g_tilde[name] = leaf_scatter(
-            send, g.shape, g.size, k_frac,
-            dtype=g.dtype if out_dtypes else jnp.float32)
-        new_lbg[name] = {"idx": jnp.where(scalar, sl["idx"], new["idx"]),
-                         "val": jnp.where(scalar, sl["val"], new["val"])}
+        new = fresh[name] if fused else leaf_topk(g, k_frac, trim_pad=trim)
+        keep_idx = jnp.where(scalar, sl["idx"], new["idx"])
+        keep_val = jnp.where(scalar, sl["val"], new["val"])
+        if sparse_out:
+            # raw values; the server folds gscale (rho | 1) into its weight
+            g_tilde[name] = {"idx": keep_idx, "val": keep_val}
+        else:
+            # scalar round: rho * dense(lbg); full round: dense(topk(g))
+            send = {"idx": keep_idx,
+                    "val": jnp.where(scalar, rho * sl["val"], new["val"])}
+            g_tilde[name] = leaf_scatter(
+                send, g.shape, g.size, k_frac,
+                dtype=g.dtype if out_dtypes else jnp.float32)
+        new_lbg[name] = {"idx": keep_idx, "val": keep_val}
     # full round uplink: k values + k indices ~ 1.5 floats per kept value
     stats = LBGMStats(sin2=sin2, rho=rho, sent_scalar=scalar,
                       uplink_floats=jnp.where(scalar, 1.0, 1.5 * total_k),
                       grad_sq_norm=gg)
+    if sparse_out:
+        gscale = jnp.where(scalar, rho, 1.0)
+        return (g_tilde, gscale), new_lbg, stats
     return g_tilde, new_lbg, stats
 
 
 def lbgm_topk_client_step(grad: Dict[str, jax.Array], lbg, delta_threshold,
-                          k_frac: float):
+                          k_frac: float, sparse_out: bool = False,
+                          fused: bool = False):
     """LBGM stacked on top-K with sparse LBG storage.
 
     grad: flat dict of dense leaves. lbg: flat dict of {idx, val}.
+    See :func:`topk_step_core` for ``sparse_out`` / ``fused``.
     """
-    return topk_step_core(grad, lbg, delta_threshold, k_frac)
+    return topk_step_core(grad, lbg, delta_threshold, k_frac,
+                          sparse_out=sparse_out, fused=fused)
 
 
 # --------------------------------------------------- threshold schedules

@@ -91,7 +91,8 @@ def init_sharded_lbg(params_like, gspecs, mesh, k_frac: float):
 
 
 def make_local_topk_step(delta: float, k_frac: float, *, corr=None,
-                         psum_axes=None, out_dtypes=False):
+                         psum_axes=None, out_dtypes=False, sparse_out=False,
+                         fused=False):
     """Device-local Algorithm-1 top-k step: ``fn(grads, lbg)``.
 
     This is the single decision body both sharded execution modes share:
@@ -104,10 +105,14 @@ def make_local_topk_step(delta: float, k_frac: float, *, corr=None,
       dense gradients and their (idx, val) bank rows, so the accept/recycle
       decision is entirely device-local and the only cross-device traffic
       of the round is the server aggregate's psum.
+
+    ``sparse_out`` / ``fused`` pass through to :func:`topk_step_core`
+    (sparse scalar-round aggregation payload / one-pass Pallas decision).
     """
     def step(grads, lbg):
         return topk_step_core(grads, lbg, delta, k_frac, corr=corr,
-                              psum_axes=psum_axes, out_dtypes=out_dtypes)
+                              psum_axes=psum_axes, out_dtypes=out_dtypes,
+                              sparse_out=sparse_out, fused=fused)
     return step
 
 

@@ -21,6 +21,11 @@ _EXPORTS = {
     "TopKLBGStore": "repro.fed.engine",
     "make_lbg_store": "repro.fed.engine",
     "make_scheduler": "repro.fed.engine",
+    "make_aggregator": "repro.fed.engine",
+    "DenseAggregator": "repro.fed.engine",
+    "SparseTopKAggregator": "repro.fed.engine",
+    "RoundPrefetcher": "repro.fed.engine",
+    "resolve_fused_kernels": "repro.fed.engine",
     # declarative experiment API
     "ExperimentSpec": "repro.fed.experiment",
     "ComponentSpec": "repro.fed.experiment",

@@ -29,18 +29,44 @@ declarative ``ExperimentSpec`` API builds on):
      O(chunk·M / n_devices) and the chunk's clients train on all devices
      concurrently — the scale axis for 512+ client cohorts.
 
-   All schedulers accumulate the server aggregate with the *same* strictly
-   sequential per-client ``lax.scan`` (carry += w_k * g_k, k = 0..K-1), so
-   their float addition order is identical and vmap/chunked (and sharded on
-   a 1-device mesh) produce bit-for-bit equal params and metrics on the
-   same seed (tested in ``tests/test_engine.py`` /
-   ``tests/test_sharded_scheduler.py``); a multi-device sharded round only
-   reassociates the final psum (fp32-tolerance equal, identical uplink
-   accounting). A scheduler is a factory ``(cfg, num_clients) -> obj`` with
-   ``chunk``/``pad`` ints plus ``prepare_batch(host_arrays)`` and
-   ``run(client_fn, params, batch, lbg, resid, w, maskf)``; an optional
-   ``layout_banks(bank)`` hook lets it own the state banks' physical
-   layout.
+   All schedulers accumulate the server aggregate through the engine's
+   *aggregator* with the *same* strictly sequential per-client ``lax.scan``
+   (carry += w_k * g_k, k = 0..K-1), so their float addition order is
+   identical and vmap/chunked (and sharded on a 1-device mesh) produce
+   bit-for-bit equal params and metrics on the same seed (tested in
+   ``tests/test_engine.py`` / ``tests/test_sharded_scheduler.py``); a
+   multi-device sharded round only reassociates the final psum
+   (fp32-tolerance equal, identical uplink accounting). A scheduler is a
+   factory ``(cfg, num_clients) -> obj`` with ``chunk``/``pad`` ints plus
+   ``prepare_batch(host_arrays)`` and
+   ``run(client_fn, agg, params, batch, lbg, resid, w, maskf)`` (``agg``
+   is the aggregator below); an optional ``layout_banks(bank)`` hook lets
+   it own the state banks' physical layout.
+
+   The aggregator is how the per-round hot path does work proportional to
+   what the round transmits (``FLConfig.fused_kernels``):
+
+   * ``DenseAggregator`` — the legacy path: every client materializes a
+     dense params-shaped g_tilde and the carry adds O(M) per client.
+   * ``SparseTopKAggregator`` — sparse scalar-round aggregation for the
+     top-k stores: each client contributes only its (idx, val) payload,
+     scatter-added into a per-leaf block-layout accumulator with the
+     client's ``w_k * gscale_k`` folded in (``gscale`` = rho on a recycle
+     round, 1 on a full round), still strictly sequentially (deterministic
+     order). The chunked/sharded inner loop drops from O(chunk·M) to
+     O(chunk·k_frac·M) flops and HBM traffic — on the scalar-heavy rounds
+     the paper demonstrates, the aggregation cost tracks the ~1-float
+     uplink instead of the model size. Full rounds are bit-for-bit equal
+     to the dense path (same values, same order); scalar rounds fold
+     w·rho before the scatter (fp32-tolerance). ``fused_kernels=False``
+     restores the dense path exactly.
+
+   Host-side, the round loop is double-buffered: ``RoundPrefetcher`` (used
+   by ``FLEngine.run`` and ``run_experiment``) prepares round t+1's
+   batches/mask on a daemon thread while the device executes round t —
+   the ROADMAP's "async round overlap" item. The prefetch thread is the
+   rng's only consumer while active, so the draw stream (and therefore
+   every number in the history) is identical to the synchronous path.
 
 2. **LBGStore** (``LBG_STORES``) — how each client's look-back gradient is
    stored and how Algorithm 1's accept/recycle decision is made:
@@ -77,6 +103,8 @@ round pays the pipeline/store cost.
 """
 from __future__ import annotations
 
+import queue
+import threading
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -92,6 +120,19 @@ from repro.core.tree_math import tree_size, tree_zeros_like
 from repro.fed.flconfig import FLConfig  # noqa: F401  (re-export)
 from repro.fed.registry import (LBG_STORES, SCHEDULERS, register_lbg_store,
                                 register_scheduler)
+
+
+def resolve_fused_kernels(cfg: FLConfig) -> bool:
+    """Pallas half of the ``FLConfig.fused_kernels`` knob.
+
+    ``None`` = auto: compiled Mosaic kernels on TPU only — everywhere else
+    the Pallas interpreter would be slower than the XLA fallback, so auto
+    turns them off. ``True`` forces them on (interpret mode off-TPU, used
+    by the fused-path tests); ``False`` is the legacy 3-pass XLA path.
+    """
+    if cfg.fused_kernels is None:
+        return jax.default_backend() == "tpu"
+    return bool(cfg.fused_kernels)
 
 
 # ------------------------------------------------------------- LBG stores
@@ -118,17 +159,24 @@ class NullLBGStore:
 
 
 class DenseLBGStore:
-    """Paper-faithful Algorithm 1: one dense params-shaped LBG per client."""
+    """Paper-faithful Algorithm 1: one dense params-shaped LBG per client.
 
-    def __init__(self, delta_threshold: float):
+    ``fused=True`` routes the decision's three O(M) reductions through the
+    one-pass Pallas projection kernel (``kernels.ops.lbgm_projection``,
+    batched over the schedulers' client vmap axis).
+    """
+
+    def __init__(self, delta_threshold: float, fused: bool = False):
         self.delta = delta_threshold
+        self.fused = fused
 
     def init(self, params, num_clients: int):
         return jax.tree.map(
             lambda p: jnp.zeros((num_clients,) + p.shape, p.dtype), params)
 
     def client_step(self, grad, lbg_k):
-        return lbgm_lib.lbgm_client_step(grad, lbg_k, self.delta)
+        return lbgm_lib.lbgm_client_step(grad, lbg_k, self.delta,
+                                         fused=self.fused)
 
     def full_round_cost(self, base_cost, stats):
         # full rounds ship whatever the uplink pipeline produced
@@ -136,11 +184,23 @@ class DenseLBGStore:
 
 
 class TopKLBGStore:
-    """Sparse (idx, val) LBG bank at k_frac density (paper App. C.1)."""
+    """Sparse (idx, val) LBG bank at k_frac density (paper App. C.1).
 
-    def __init__(self, delta_threshold: float, k_frac: float = 0.1):
+    ``fused=True`` fuses the decision's three dense passes per leaf
+    (gather, ||g||^2, block top-k) into one Pallas pass
+    (``kernels.ops.lbgm_sparse_decision``). ``sparse_client_step`` /
+    ``make_aggregator`` implement the sparse scalar-round aggregation
+    contract (see the module docstring): the step emits only the (idx,
+    val) payload + a gscale scalar, and the matching
+    :class:`SparseTopKAggregator` scatter-adds it into the round
+    aggregate — no per-client dense g_tilde anywhere.
+    """
+
+    def __init__(self, delta_threshold: float, k_frac: float = 0.1,
+                 fused: bool = False):
         self.delta = delta_threshold
         self.k_frac = k_frac
+        self.fused = fused
 
     def init(self, params, num_clients: int):
         proto = lbgm_lib.init_topk_lbg(params, self.k_frac)
@@ -149,7 +209,16 @@ class TopKLBGStore:
 
     def client_step(self, grad, lbg_k):
         return lbgm_lib.lbgm_topk_client_step(grad, lbg_k, self.delta,
-                                              self.k_frac)
+                                              self.k_frac, fused=self.fused)
+
+    def sparse_client_step(self, grad, lbg_k):
+        """((send, gscale), new_lbg, stats) — no dense scatter."""
+        return lbgm_lib.lbgm_topk_client_step(grad, lbg_k, self.delta,
+                                              self.k_frac, sparse_out=True,
+                                              fused=self.fused)
+
+    def make_aggregator(self, params):
+        return SparseTopKAggregator(params, self.k_frac)
 
     def full_round_cost(self, base_cost, stats):
         # the sparse-transmission cost model (values + block-local indices)
@@ -173,28 +242,143 @@ class ShardedTopKLBGStore(TopKLBGStore):
     interchangeable bit-for-bit on any scheduler.
     """
 
-    def __init__(self, delta_threshold: float, k_frac: float = 0.1):
-        super().__init__(delta_threshold, k_frac)
-        self._step = make_local_topk_step(delta_threshold, k_frac)
+    def __init__(self, delta_threshold: float, k_frac: float = 0.1,
+                 fused: bool = False):
+        super().__init__(delta_threshold, k_frac, fused=fused)
+        self._step = make_local_topk_step(delta_threshold, k_frac,
+                                          fused=fused)
+        self._sparse_step = make_local_topk_step(delta_threshold, k_frac,
+                                                 sparse_out=True,
+                                                 fused=fused)
 
     def client_step(self, grad, lbg_k):
         return self._step(grad, lbg_k)
 
+    def sparse_client_step(self, grad, lbg_k):
+        return self._sparse_step(grad, lbg_k)
+
+
+def _lbg_kw(cfg: FLConfig) -> dict:
+    """User lbg_kw with an actionable error for engine-reserved keys
+    (a raw collision would surface as a cryptic TypeError from the store
+    constructor, against this repo's validated-config convention)."""
+    kw = dict(cfg.lbg_kw or {})
+    if "fused" in kw:
+        raise ValueError(
+            "FLConfig.lbg_kw: 'fused' is engine-controlled — set "
+            "FLConfig.fused_kernels instead of passing it to the store")
+    return kw
+
 
 register_lbg_store("null", lambda cfg: NullLBGStore())
 register_lbg_store("dense", aliases=("full",))(
-    lambda cfg: DenseLBGStore(cfg.delta_threshold))
+    lambda cfg: DenseLBGStore(cfg.delta_threshold,
+                              fused=resolve_fused_kernels(cfg)))
 register_lbg_store("topk")(
-    lambda cfg: TopKLBGStore(cfg.delta_threshold, **(cfg.lbg_kw or {})))
+    lambda cfg: TopKLBGStore(cfg.delta_threshold,
+                             fused=resolve_fused_kernels(cfg),
+                             **_lbg_kw(cfg)))
 register_lbg_store("topk-sharded")(
     lambda cfg: ShardedTopKLBGStore(cfg.delta_threshold,
-                                    **(cfg.lbg_kw or {})))
+                                    fused=resolve_fused_kernels(cfg),
+                                    **_lbg_kw(cfg)))
 
 
 def make_lbg_store(cfg: FLConfig):
     """Resolve the configured LBG storage scheme through ``LBG_STORES``."""
     key = "null" if not cfg.use_lbgm else cfg.resolved_lbg_variant
     return LBG_STORES.get(key)(cfg)
+
+
+# ------------------------------------------------------------ aggregators
+
+class DenseAggregator:
+    """Legacy accumulation: dense fp32 params-shaped carry, strictly
+    sequential weighted sum over each client's dense g_tilde (O(M) flops
+    and HBM traffic per client, whatever the round transmitted)."""
+
+    def init(self, params):
+        return tree_zeros_like(params, jnp.float32)
+
+    def accumulate(self, acc, w, gt_stack):
+        return _seq_weighted_sum(acc, w, gt_stack)
+
+    def finalize(self, acc):
+        return acc
+
+
+class SparseTopKAggregator:
+    """Sparse scalar-round aggregation for the top-k LBG stores.
+
+    The carry is a per-leaf ``(nb, block)`` fp32 accumulator in the same
+    block layout as the sparse bank. Each client k contributes exactly its
+    transmitted payload: ``(w_k * gscale_k) * send.val`` scatter-added at
+    ``send.idx`` — O(k_frac·M) per client instead of the dense path's
+    O(M) scatter + O(M) add. Accumulation stays a strictly sequential
+    per-client ``lax.scan`` (deterministic order; top-k indices are unique
+    within a block row, so the scatter-add itself is order-free), and
+    ``finalize`` reshapes back to the params layout once per round.
+
+    Equivalence to :class:`DenseAggregator` (the oracle, kept behind
+    ``fused_kernels=False``): bit-for-bit on full rounds (``gscale == 1``
+    makes every addend ``w_k * val`` — same values, same order; untouched
+    positions only ever add exact zeros), fp32-reassociation-tolerance on
+    scalar rounds (``w_k * rho_k`` is folded before the multiply with the
+    LBG values instead of after).
+    """
+
+    def __init__(self, params, k_frac: float):
+        self._layout = {
+            name: (leaf.shape, int(leaf.size))
+            + lbgm_lib._block_layout(int(leaf.size), k_frac)[:2]
+            for name, leaf in params.items()}
+
+    def init(self, params):
+        return {name: jnp.zeros((nb, block), jnp.float32)
+                for name, (_, _, nb, block) in self._layout.items()}
+
+    def accumulate(self, acc, w, out):
+        send, gscale = out            # leaves (C, nb, kb); gscale (C,)
+
+        def body(a, x):
+            w_k, send_k, s_k = x
+            coeff = w_k * s_k
+
+            def upd(ai, sk):
+                # gather-modify-scatter rather than scatter-add: the
+                # update is then the same `a + where(w>0, c*v, 0)`
+                # expression the dense path accumulates with, so XLA's
+                # FMA contraction applies identically and full rounds stay
+                # bit-for-bit equal to DenseAggregator (a scatter-add
+                # rounds the multiply separately — off by 1 ulp). Sound
+                # because top-k indices are unique within a block row.
+                # The w_k > 0 gate mirrors _seq_weighted_sum: phantom pad
+                # clients may carry NaN values/gscale.
+                rows = jnp.arange(ai.shape[0])[:, None]
+                cur = ai[rows, sk["idx"]]
+                new = cur + jnp.where(w_k > 0, coeff * sk["val"], 0.0)
+                return ai.at[rows, sk["idx"]].set(new)
+
+            return {name: upd(a[name], send_k[name]) for name in a}, None
+
+        acc, _ = jax.lax.scan(body, acc, (w, send, gscale))
+        return acc
+
+    def finalize(self, acc):
+        return {name: acc[name].reshape(-1)[:size].reshape(shape)
+                for name, (shape, size, _, _) in self._layout.items()}
+
+
+def make_aggregator(cfg: FLConfig, store, params):
+    """Resolve the round aggregation strategy for ``(cfg, store)``.
+
+    Sparse scalar-round aggregation is on whenever the store supports it
+    and ``fused_kernels`` is not explicitly ``False`` (it is pure XLA, so
+    unlike the Pallas kernels it pays off on every backend).
+    """
+    if cfg.fused_kernels is not False and hasattr(store, "make_aggregator"):
+        return store.make_aggregator(params), True
+    return DenseAggregator(), False
 
 
 # ------------------------------------------------------------- schedulers
@@ -248,11 +432,11 @@ class VmapScheduler:
     def prepare_batch(self, stacked: Dict[str, np.ndarray]):
         return stacked  # leaves stay (K, tau, b, ...)
 
-    def run(self, client_fn, params, batch, lbg, resid, w, maskf):
+    def run(self, client_fn, agg, params, batch, lbg, resid, w, maskf):
         gt, new_lbg, new_res, loss, uplink, scalar = jax.vmap(
             lambda b, l, r: client_fn(params, b, l, r))(batch, lbg, resid)
-        agg = _seq_weighted_sum(tree_zeros_like(params, jnp.float32), w, gt)
-        return (agg, _keep_sampled(maskf, new_lbg, lbg),
+        acc = agg.accumulate(agg.init(params), w, gt)
+        return (agg.finalize(acc), _keep_sampled(maskf, new_lbg, lbg),
                 _keep_sampled(maskf, new_res, resid), loss, uplink, scalar)
 
 
@@ -274,17 +458,20 @@ class ChunkedScheduler:
     def prepare_batch(self, stacked: Dict[str, np.ndarray]):
         """(K, tau, b, ...) -> (n_chunks, chunk, tau, b, ...), padded
         host-side so the device scan consumes the argument buffer
-        directly (no device-side copy)."""
+        directly (no device-side copy). The pad rows are written into one
+        preallocated buffer (no extra concatenate copy of the K rows)."""
         chunk, pad = self.chunk, self.pad
 
         def to_chunks(x):
             if pad:
-                x = np.concatenate(
-                    [x, np.zeros((pad,) + x.shape[1:], x.dtype)])
+                padded = np.zeros((x.shape[0] + pad,) + x.shape[1:],
+                                  x.dtype)
+                padded[:x.shape[0]] = x
+                x = padded
             return x.reshape((x.shape[0] // chunk, chunk) + x.shape[1:])
         return {k: to_chunks(v) for k, v in stacked.items()}
 
-    def run(self, client_fn, params, batch, lbg, resid, w, maskf):
+    def run(self, client_fn, agg, params, batch, lbg, resid, w, maskf):
         K, chunk, pad = self.num_clients, self.chunk, self.pad
         if pad:
             w = jnp.concatenate([w, jnp.zeros(pad, w.dtype)])
@@ -303,17 +490,17 @@ class ChunkedScheduler:
             l_c, r_c = slice_at(lbg_bank, i), slice_at(res_bank, i)
             gt, nl, nr, loss, uplink, scalar = jax.vmap(
                 lambda b, l, r: client_fn(params, b, l, r))(b_c, l_c, r_c)
-            acc = _seq_weighted_sum(acc, w_c, gt)
+            acc = agg.accumulate(acc, w_c, gt)
             lbg_bank = update_at(lbg_bank, _keep_sampled(m_c, nl, l_c), i)
             res_bank = update_at(res_bank, _keep_sampled(m_c, nr, r_c), i)
             return (acc, lbg_bank, res_bank), (loss, uplink, scalar)
 
-        init = (tree_zeros_like(params, jnp.float32), lbg, resid)
-        (agg, new_lbg, new_res), (loss, uplink, scalar) = jax.lax.scan(
+        init = (agg.init(params), lbg, resid)
+        (acc, new_lbg, new_res), (loss, uplink, scalar) = jax.lax.scan(
             chunk_body, init,
             (jnp.arange(n_chunks), batch, w.reshape(n_chunks, chunk),
              maskf.reshape(n_chunks, chunk)))
-        return (agg, new_lbg, new_res, loss.reshape(Kp)[:K],
+        return (agg.finalize(acc), new_lbg, new_res, loss.reshape(Kp)[:K],
                 uplink.reshape(Kp)[:K], scalar.reshape(Kp)[:K])
 
 
@@ -388,7 +575,7 @@ class ShardedScheduler(ChunkedScheduler):
             return x
         return jax.tree.map(f, bank)
 
-    def run(self, client_fn, params, batch, lbg, resid, w, maskf):
+    def run(self, client_fn, agg, params, batch, lbg, resid, w, maskf):
         K, chunk, pad, ax = self.num_clients, self.chunk, self.pad, self.AXIS
         if pad:
             w = jnp.concatenate([w, jnp.zeros(pad, w.dtype)])
@@ -403,10 +590,11 @@ class ShardedScheduler(ChunkedScheduler):
             # device 0 seeds its local accumulation with the scan carry, so
             # each chunk folds into the aggregate in the same strictly
             # sequential order as ChunkedScheduler; the psum is the
-            # identity on a 1-device mesh
+            # identity on a 1-device mesh (the carry — dense params-shaped
+            # or sparse block-layout, per the aggregator — is replicated)
             first = jax.lax.axis_index(ax) == 0
             acc = jax.tree.map(lambda a: jnp.where(first, a, 0.0), acc)
-            acc = jax.lax.psum(_seq_weighted_sum(acc, w_c, gt), ax)
+            acc = jax.lax.psum(agg.accumulate(acc, w_c, gt), ax)
             return (acc, _keep_sampled(m_c, nl, l),
                     _keep_sampled(m_c, nr, r), loss, uplink, scalar)
 
@@ -431,12 +619,12 @@ class ShardedScheduler(ChunkedScheduler):
             return ((acc, put_at(lbg_bank, nl, i), put_at(res_bank, nr, i)),
                     (loss, uplink, scalar))
 
-        init = (tree_zeros_like(params, jnp.float32), lbg, resid)
-        (agg, new_lbg, new_res), (loss, uplink, scalar) = jax.lax.scan(
+        init = (agg.init(params), lbg, resid)
+        (acc, new_lbg, new_res), (loss, uplink, scalar) = jax.lax.scan(
             chunk_body, init,
             (jnp.arange(n_chunks), batch, w.reshape(n_chunks, chunk),
              maskf.reshape(n_chunks, chunk)))
-        return (agg, new_lbg, new_res, loss.reshape(Kp)[:K],
+        return (agg.finalize(acc), new_lbg, new_res, loss.reshape(Kp)[:K],
                 uplink.reshape(Kp)[:K], scalar.reshape(Kp)[:K])
 
 
@@ -473,11 +661,28 @@ class FLEngine:
         # assertions read them
         self.sched = make_scheduler(flcfg, K)
         self._chunk, self._pad = self.sched.chunk, self.sched.pad
-        self.weights = np.array([len(next(iter(d.values())))
-                                 for d in client_data], np.float64)
-        self.weights = jnp.asarray(self.weights / self.weights.sum(),
-                                   jnp.float32)
+        sizes = np.array([len(next(iter(d.values())))
+                          for d in client_data], np.float64)
+        self.weights = jnp.asarray(sizes / sizes.sum(), jnp.float32)
+        # per-round batch gathers run against one concatenated copy of the
+        # client data (client k's samples live at offset[k]:offset[k]+n_k),
+        # so _sample_batches is a single vectorized fancy-index instead of
+        # a K-iteration Python loop of per-client gathers + np.stack.
+        # client_data is then re-pointed at zero-copy views into the
+        # concatenation so the engine holds ONE copy of the dataset.
+        self._data_sizes = sizes.astype(np.int64)
+        self._data_offsets = np.concatenate(
+            [[0], np.cumsum(self._data_sizes[:-1])]).astype(np.int64)
+        self._data_cat = {k: np.concatenate([d[k] for d in client_data])
+                          for k in client_data[0]}
+        self.client_data = [
+            {k: v[off:off + n] for k, v in self._data_cat.items()}
+            for off, n in zip(self._data_offsets, self._data_sizes)]
         self.store = make_lbg_store(flcfg)
+        # aggregation strategy: sparse scalar-round scatter-add when the
+        # store supports it and fused_kernels is not explicitly False
+        self.agg, self._sparse_agg = make_aggregator(flcfg, self.store,
+                                                     params)
         # banks are allocated padded to the chunk grid once, up front; the
         # phantom rows stay zero forever (their mask is always 0), so the
         # per-round scan updates them in place with no pad/slice copies
@@ -520,10 +725,16 @@ class FLEngine:
             asg = jax.tree.map(lambda g: jnp.sum(g, 0), gs)
             return asg, jnp.mean(ls)
 
+        sparse = self._sparse_agg
+
         def client_fn(params, batches, lbg_k, resid_k):
             asg, loss = client_update(params, batches)
             asg, resid_k, cost = pipeline(asg, resid_k)
-            gt, lbg_k, stats = store.client_step(asg, lbg_k)
+            # sparse aggregation: gt is the ((idx, val) payload, gscale)
+            # pair the SparseTopKAggregator scatter-adds — the dense
+            # g_tilde is never materialized
+            step = store.sparse_client_step if sparse else store.client_step
+            gt, lbg_k, stats = step(asg, lbg_k)
             # scalar rounds upload 1 float; full rounds pay the base cost
             uplink = jnp.where(stats.sent_scalar, 1.0,
                                store.full_round_cost(cost, stats))
@@ -535,6 +746,7 @@ class FLEngine:
         cfg = self.cfg
         client_fn = self._build_client_fn()
         sched = self.sched
+        aggregator = self.agg
 
         def round_fn(params, lbg, residual, batch, mask):
             """batch leaves: scheduler layout (see prepare_batch);
@@ -546,7 +758,8 @@ class FLEngine:
             w = self.weights * maskf
             w = w / jnp.maximum(jnp.sum(w), 1e-12)
             agg, new_lbg, new_res, losses, uplink, scalar = sched.run(
-                client_fn, params, batch, lbg, residual, w, maskf)
+                client_fn, aggregator, params, batch, lbg, residual, w,
+                maskf)
             new_params = jax.tree.map(
                 lambda p, a: p - cfg.lr * a.astype(p.dtype), params, agg)
             metrics = {
@@ -563,18 +776,23 @@ class FLEngine:
     def _sample_batches(self, rng: np.random.RandomState):
         """Per-round client batches, laid out by the scheduler's
         ``prepare_batch`` (vmap: (K, tau, b, ...); chunked:
-        (n_chunks, chunk, tau, b, ...), padded host-side)."""
+        (n_chunks, chunk, tau, b, ...), padded host-side).
+
+        The K per-client index draws stay sequential — the rng stream is
+        part of the reproducibility contract (identical draws to the
+        original per-client loop) — but materialization is ONE vectorized
+        fancy-index per data key from the concatenated client data
+        straight into the (K, tau, b, ...) buffer: no per-client gather
+        loop, no intermediate list + ``np.stack`` copy. This is the host
+        half of the round hot path that :class:`RoundPrefetcher` overlaps
+        with device execution.
+        """
         cfg = self.cfg
-        out = None
-        for d in self.client_data:
-            n = len(next(iter(d.values())))
-            idx = rng.randint(0, n, size=(cfg.tau, cfg.batch_size))
-            picked = {k: v[idx] for k, v in d.items()}
-            if out is None:
-                out = {k: [] for k in picked}
-            for k, v in picked.items():
-                out[k].append(v)
-        stacked = {k: np.stack(v) for k, v in out.items()}
+        idx = np.empty((cfg.num_clients, cfg.tau, cfg.batch_size), np.int64)
+        for k, n in enumerate(self._data_sizes):
+            idx[k] = rng.randint(0, n, size=(cfg.tau, cfg.batch_size))
+        idx += self._data_offsets[:, None, None]
+        stacked = {k: v[idx] for k, v in self._data_cat.items()}
         stacked = self.sched.prepare_batch(stacked)
         return {k: jnp.asarray(v) for k, v in stacked.items()}
 
@@ -598,9 +816,27 @@ class FLEngine:
         return mask
 
     # -------------------------------------------------------------- run
-    def run_round(self, rng: np.random.RandomState) -> Dict[str, float]:
-        batch = self._sample_batches(rng)
-        mask = self._sample_mask(rng)
+    def prefetcher(self, rng: np.random.RandomState,
+                   depth: int = 2) -> "RoundPrefetcher":
+        """Double-buffered host batch prep over ``rng``'s draw stream.
+
+        Pass the returned object to :meth:`run_round` in place of the rng;
+        while it is alive it must be the ONLY consumer of ``rng`` (that is
+        what keeps the stream identical to the synchronous path). Call
+        ``close()`` when done — it stops the thread; the rng has then been
+        advanced by up to ``depth`` + 1 prefetched rounds.
+        """
+        return RoundPrefetcher(self, rng, depth=depth)
+
+    def run_round(self, rng) -> Dict[str, float]:
+        """One FL round. ``rng`` is either a ``np.random.RandomState``
+        (synchronous host prep) or a :class:`RoundPrefetcher` (batches and
+        mask already staged by the prefetch thread — same draw stream)."""
+        if isinstance(rng, RoundPrefetcher):
+            batch, mask = rng.next()
+        else:
+            batch = self._sample_batches(rng)
+            mask = self._sample_mask(rng)
         self.params, self.lbg, self.residual, metrics = self._round(
             self.params, self.lbg, self.residual, batch,
             jnp.asarray(mask, jnp.float32))
@@ -624,13 +860,98 @@ class FLEngine:
         return self.ledger.vanilla_floats
 
     def run(self, rounds: int, eval_fn: Optional[Callable] = None,
-            eval_every: int = 10, verbose: bool = False):
+            eval_every: int = 10, verbose: bool = False,
+            prefetch: bool = True):
         rng = np.random.RandomState(self.cfg.seed + 1)
-        for r in range(rounds):
-            m = self.run_round(rng)
-            if eval_fn is not None and (r + 1) % eval_every == 0:
-                m.update(eval_fn(self.params))
-            if verbose and (r + 1) % eval_every == 0:
-                print(f"round {r+1:4d} " +
-                      " ".join(f"{k}={v:.4g}" for k, v in m.items()))
+        # host batch prep for round t+1 overlaps device execution of
+        # round t; numerically invisible (same rng stream, same data)
+        src = self.prefetcher(rng) if prefetch else rng
+        try:
+            for r in range(rounds):
+                m = self.run_round(src)
+                if eval_fn is not None and (r + 1) % eval_every == 0:
+                    m.update(eval_fn(self.params))
+                if verbose and (r + 1) % eval_every == 0:
+                    print(f"round {r+1:4d} " +
+                          " ".join(f"{k}={v:.4g}" for k, v in m.items()))
+        finally:
+            if prefetch:
+                src.close()
         return self.history
+
+
+# ------------------------------------------------------------- prefetcher
+
+class RoundPrefetcher:
+    """Host->device double buffering for the round loop (the ROADMAP's
+    "async round overlap" item).
+
+    A daemon thread draws each round's ``(batch, mask)`` from the engine's
+    rng IN ROUND ORDER (batches first, then the participation mask —
+    exactly the synchronous ``run_round`` order) and stages the device
+    transfers, so round t+1's host prep and H2D copies overlap the device
+    executing round t. While the prefetcher is alive it is the rng's only
+    consumer, so every number in the round history is bit-identical to the
+    synchronous path; the only observable difference is that ``close()``
+    leaves the rng advanced by the rounds still sitting in the buffer.
+    """
+
+    _SENTINEL = object()
+
+    def __init__(self, engine: "FLEngine", rng: np.random.RandomState,
+                 depth: int = 2):
+        self._engine = engine
+        self._rng = rng
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
+        self._stop = threading.Event()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._produce, name="fl-round-prefetch", daemon=True)
+        self._thread.start()
+
+    def _produce(self):
+        try:
+            while not self._stop.is_set():
+                item = (self._engine._sample_batches(self._rng),
+                        self._engine._sample_mask(self._rng))
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(item, timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
+        except BaseException as e:  # re-raised on the consumer side
+            self._err = e
+            while not self._stop.is_set():
+                try:
+                    self._q.put(self._SENTINEL, timeout=0.05)
+                    break
+                except queue.Full:
+                    continue
+
+    def next(self):
+        """The next round's (batch, mask); raises if the thread died.
+
+        Once the producer has failed, every subsequent call re-raises
+        immediately (the sentinel is posted once; without the dead flag a
+        retry would block forever on the empty queue), and calling after
+        ``close()`` errors instead of deadlocking on the dead producer."""
+        if self._err is not None and self._q.empty():
+            raise RuntimeError(
+                "round prefetch thread failed") from self._err
+        if self._stop.is_set() and self._q.empty():
+            raise RuntimeError("RoundPrefetcher used after close()")
+        item = self._q.get()
+        if item is self._SENTINEL:
+            raise RuntimeError(
+                "round prefetch thread failed") from self._err
+        return item
+
+    def close(self):
+        self._stop.set()
+        while True:  # drain so a blocked put() observes the stop flag
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=10)

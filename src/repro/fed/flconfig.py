@@ -9,6 +9,12 @@ shared defaults are read from ``FLConfig``'s fields and it converts via
 ``LBGMConfig.to_fl()`` / ``FLConfig.from_lbgm()``), so the two can no
 longer drift.
 
+``fused_kernels`` gates the engine's fused decision hot path (one-pass
+Pallas projection/decision kernels + sparse scalar-round aggregation);
+like every other field it is a plain JSON value (``None``/``true``/
+``false``) and round-trips losslessly through ``to_dict``/``from_dict``
+and any ``ExperimentSpec`` embedding it.
+
 Every field is validated at construction (not at ``FLEngine.__init__``):
 registry-keyed fields (``scheduler``, ``lbg_variant``, ``compressor``)
 are checked against the live registries and the error lists the
@@ -49,6 +55,15 @@ class FLConfig:
                                      # devices; resolved by launch/mesh.py)
     lbg_variant: str = "dense"       # registry key: dense | topk | null | ...
     lbg_kw: Optional[dict] = None    # e.g. {"k_frac": 0.1} for topk
+    fused_kernels: Optional[bool] = None
+    # ^ the LBGM decision hot path. None (default) = auto: sparse
+    #   scalar-round aggregation wherever the LBG store supports it (any
+    #   backend) + one-pass Pallas decision kernels on TPU only (XLA
+    #   fallback elsewhere). True forces the Pallas kernels on too
+    #   (interpret mode off-TPU — for testing). False = the legacy dense
+    #   path: per-client dense g_tilde scatter + 3-pass XLA decision,
+    #   bit-for-bit identical to pre-knob round histories. Plain
+    #   Optional[bool], so specs stay JSON-able and round-trip losslessly.
 
     # ---------------------------------------------------------- validation
     def __post_init__(self):
@@ -70,6 +85,14 @@ class FLConfig:
         # sharded scheduler resolves it to a live Mesh at engine build
         if self.mesh is not None and self.mesh < 1:
             bad(f"mesh must be None or a device count >= 1, got {self.mesh}")
+        # identity check, not `in`: 0/1 compare == to False/True but would
+        # silently miss the `is not False` gate in the engine's aggregator
+        # selection — reject them with the fix in the message
+        if not any(self.fused_kernels is v for v in (None, True, False)):
+            bad("fused_kernels must be None (auto: Pallas on TPU, sparse "
+                "aggregation everywhere), true, or false (legacy dense "
+                f"path) — got {self.fused_kernels!r}; JSON/CLI specs must "
+                "use the boolean literals, not 0/1")
         # registry-keyed fields: fail now, with the registered names in the
         # message, instead of deep inside the engine build
         from repro.fed import registry as reg

@@ -11,6 +11,21 @@ def lbgm_projection_ref(g: jax.Array, l: jax.Array):
     return jnp.dot(g32, l32), jnp.dot(g32, g32), jnp.dot(l32, l32)
 
 
+def lbgm_sparse_decision_ref(blocks: jax.Array, idx: jax.Array):
+    """The three dense passes the fused sparse kernel replaces.
+    blocks: (nb, block) f32; idx: (nb, kb) int32 block-local positions.
+    Returns (gg scalar, gathered (nb, kb), top_idx (nb, kb), top_val
+    (nb, kb)) — top-k is by |value| per block row, values kept signed.
+    """
+    b32 = blocks.astype(jnp.float32)
+    gg = jnp.sum(b32 * b32)
+    gathered = jnp.take_along_axis(b32, idx, axis=1)
+    kb = idx.shape[1]
+    _, ti = jax.lax.top_k(jnp.abs(b32), kb)
+    tv = jnp.take_along_axis(b32, ti, axis=1)
+    return gg, gathered, ti.astype(jnp.int32), tv
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=None):
     """Naive softmax attention. q:(BH,Tq,hd), k/v:(BH,Tk,hd)."""
     Tq, Tk = q.shape[1], k.shape[1]
