@@ -18,18 +18,33 @@ excluded; host prep is prefetched, so the number is steady-state device
 time per round. tau/batch are kept small and the FCN widened so the
 round is aggregation- rather than local-SGD-bound — the quantity this
 section exists to measure.
+
+The ``mesh_shapes`` section is the ISSUE-5 acceptance measurement: the
+same scalar-heavy experiment across 2-D ``(clients, model)`` mesh shapes
+— every factorization of the local device count — so BENCH_engine.json
+records how the round time moves as the client axis trades devices with
+the model axis. Every row emitted by this module carries
+``mesh``/``mesh_shape``/``fused_kernels`` metadata (``common.
+spec_metadata``) so rows from different PRs are attributable to the
+execution path that produced them.
 """
 from __future__ import annotations
 
 import time
 
-from benchmarks.common import build_spec, emit, record_bench
+from benchmarks.common import build_spec, emit, record_bench, spec_metadata
+
+
+def _mesh_factorizations(n_dev: int):
+    """(clients, model) shapes to sweep: every c*m == n_dev split."""
+    return [(c, n_dev // c) for c in range(1, n_dev + 1) if n_dev % c == 0]
 
 
 def run(rounds: int = 3, cohorts=(32, 128), chunk_size: int = 8,
         scalar_cohorts=(128,), scalar_rounds: int = 6,
         scalar_warmup: int = 2, scalar_d_model: int = 512,
-        scalar_chunk: int = 16, scalar_k_frac: float = 0.01) -> None:
+        scalar_chunk: int = 16, scalar_k_frac: float = 0.01,
+        mesh_cohorts=(32,)) -> None:
     import jax
 
     from repro.fed import run_experiment
@@ -48,11 +63,45 @@ def run(rounds: int = 3, cohorts=(32, 128), chunk_size: int = 8,
             result = run_experiment(spec, rounds)
             emit(f"cohort_scaling/{sched}/K{K}", result.us_per_round,
                  f"savings={result.savings:.3f};n_dev={n_dev}",
-                 K=K, scheduler=sched, n_dev=n_dev)
+                 K=K, n_dev=n_dev, **spec_metadata(spec))
     for K in scalar_cohorts:
         scalar_round_comparison(K, scalar_chunk, scalar_rounds,
                                 scalar_warmup, scalar_d_model, n_dev,
                                 k_frac=scalar_k_frac)
+    for K in mesh_cohorts:
+        mesh_shape_sweep(K, scalar_chunk, scalar_rounds, scalar_warmup,
+                         scalar_d_model, n_dev, k_frac=scalar_k_frac)
+
+
+def mesh_shape_sweep(K: int, chunk_size: int, rounds: int, warmup: int,
+                     d_model: int, n_dev: int,
+                     k_frac: float = 0.01) -> None:
+    """2-D mesh shapes, same experiment: how does us/round move as the
+    ``n_dev`` local devices split between the client and model axes?
+
+    Scalar-heavy rounds (delta=1) with the topk-sharded store, so the
+    quantity under the knife is exactly what the 2-D mesh shards: the
+    LBGM decision + sparse aggregation working set. ``(n_dev, 1)`` is the
+    pre-2-D sharded baseline; shapes with model > 1 trade client
+    parallelism for per-device bank memory (expect them slower on
+    wall-clock when the local-SGD compute — replicated along model —
+    dominates, as on CPU hosts: the model axis buys HBM, not flops).
+    """
+    for c, m in _mesh_factorizations(n_dev):
+        chunk = max(chunk_size, c)  # block must split over the client axis
+        spec = build_spec(
+            num_clients=K, n_data=4 * K * 8, tau=1, batch_size=8,
+            model_kw={"d_model": d_model},
+            name=f"mesh-{c}x{m}-K{K}", scheduler="sharded",
+            mesh=[c, m], use_lbgm=True, delta_threshold=1.0,
+            chunk_size=chunk, lbg_variant="topk-sharded",
+            lbg_kw={"k_frac": k_frac})
+        us = _time_scalar_rounds(spec, rounds, warmup)
+        emit(f"cohort_scaling/mesh_shapes/{c}x{m}/K{K}", us,
+             f"delta=1.0 d_model={d_model} k_frac={k_frac} tau=1 "
+             f"n_dev={n_dev} mesh=({c},{m})",
+             K=K, d_model=d_model, k_frac=k_frac, n_dev=n_dev,
+             **spec_metadata(spec))
 
 
 def _time_scalar_rounds(spec, rounds: int, warmup: int) -> float:
@@ -104,8 +153,8 @@ def scalar_round_comparison(K: int, chunk_size: int, rounds: int,
                  us[label],
                  f"delta=1.0 d_model={d_model} k_frac={k_frac} tau=1 "
                  f"n_dev={n_dev} fused_kernels={fused}",
-                 K=K, scheduler=sched, path=label, d_model=d_model,
-                 k_frac=k_frac, n_dev=n_dev)
+                 K=K, path=label, d_model=d_model,
+                 k_frac=k_frac, n_dev=n_dev, **spec_metadata(spec))
         # the ratio row reports the ratio itself (not a time): CSV + JSON
         # are written directly so the us_per_round field isn't abused
         ratio = us["dense"] / max(us["sparse"], 1e-9)
@@ -115,8 +164,10 @@ def scalar_round_comparison(K: int, chunk_size: int, rounds: int,
                    f"speedup={ratio:.2f}x (acceptance: >=1.3x; row value "
                    "is the dense/sparse ratio, not a time)")
         print(f"{name},{ratio:.2f},{derived}")
-        record_bench(name, ratio, {"derived": derived, "K": K,
-                                   "scheduler": sched, "speedup": ratio})
+        meta = {"derived": derived, "K": K, "speedup": ratio,
+                **spec_metadata(spec)}
+        meta["fused_kernels"] = "false-vs-default"  # the row IS the compare
+        record_bench(name, ratio, meta)
 
 
 if __name__ == "__main__":

@@ -54,6 +54,27 @@ def build_spec(num_clients=20, tau=2, lr=0.05, batch_size=16, seed=0,
     )
 
 
+def spec_metadata(spec) -> Dict[str, Any]:
+    """The attribution keys every BENCH_engine.json row should carry:
+    which execution path produced the number. ``mesh`` is the raw
+    JSON-able FLConfig knob (None / int / [clients, model]);
+    ``mesh_shape`` the resolved (clients, model) pair (None-spec resolves
+    to every local device on the client axis, matching ``make_fl_mesh``);
+    ``fused_kernels`` the raw tri-state knob. Rows from different PRs
+    stay diffable because the path is in the row, not in the CI log."""
+    import jax
+    fl = spec.fl
+    shape = fl.mesh_shape
+    if shape is None and fl.scheduler == "sharded":
+        shape = (len(jax.devices()), 1)
+    return {
+        "mesh": fl.mesh,
+        "mesh_shape": list(shape) if shape is not None else None,
+        "fused_kernels": fl.fused_kernels,
+        "scheduler": fl.scheduler,
+    }
+
+
 @functools.lru_cache(maxsize=1)
 def _git_rev() -> str:
     try:

@@ -55,7 +55,8 @@ def main() -> None:
         if args.toy:
             cohort_scaling.run(rounds=2, cohorts=(8,), chunk_size=4,
                                scalar_cohorts=(8,), scalar_rounds=2,
-                               scalar_warmup=2, scalar_d_model=64)
+                               scalar_warmup=2, scalar_d_model=64,
+                               mesh_cohorts=(8,))
         else:
             cohort_scaling.run(rounds=min(args.rounds, 5))
 

@@ -41,6 +41,41 @@ class LBGMStats(NamedTuple):
     grad_sq_norm: jax.Array
 
 
+def recycle_gate(sin2, delta_threshold) -> jax.Array:
+    """Algorithm 1 step 7: recycle iff the LBP error clears the threshold.
+
+    ``sin2 == 1.0`` covers both degenerate LBGs (round 0) and orthogonal
+    gradients — either way a full round is strictly better. The single
+    home of the gate: every decomposition (dense, sparse, client- and
+    model-sharded) routes through here, so the rule cannot drift.
+    """
+    return (sin2 <= delta_threshold) & (sin2 < 1.0)
+
+
+def decision_from_scalars(gl, gg, ll, delta_threshold
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(sin2, rho, sent_scalar) from the three projection scalars.
+
+    The whole Algorithm-1 decision once <g,l>, ||g||^2, ||l||^2 are in
+    hand — how the scalars were reduced (dense vdots, sparse gathers, a
+    psum over mesh axes) is the only thing the call sites differ in.
+    """
+    cos2 = (gl * gl) / jnp.maximum(gg * ll, EPS)
+    sin2 = jnp.where(ll > EPS, 1.0 - cos2, 1.0)
+    rho = gl / jnp.maximum(ll, EPS)
+    return sin2, rho, recycle_gate(sin2, delta_threshold)
+
+
+def topk_uplink_stats(sin2, rho, scalar, gg, total_k: int) -> LBGMStats:
+    """Sparse-store round stats incl. the uplink cost model (k values +
+    k block-local indices ~ 1.5 floats per kept value on a full round,
+    exactly 1 float on a recycle round) — shared by every topk-step
+    decomposition so the accounting stays mesh- and variant-independent."""
+    return LBGMStats(sin2=sin2, rho=rho, sent_scalar=scalar,
+                     uplink_floats=jnp.where(scalar, 1.0, 1.5 * total_k),
+                     grad_sq_norm=gg)
+
+
 def lbgm_stats(grad, lbg, fused: bool = False
                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """(sin2, rho, gg). Degenerate LBG (zero) forces a full-gradient round.
@@ -58,9 +93,7 @@ def lbgm_stats(grad, lbg, fused: bool = False
         gl = tree_vdot(grad, lbg)
         gg = tree_sq_norm(grad)
         ll = tree_sq_norm(lbg)
-    cos2 = (gl * gl) / jnp.maximum(gg * ll, EPS)
-    sin2 = jnp.where(ll > EPS, 1.0 - cos2, 1.0)
-    rho = gl / jnp.maximum(ll, EPS)
+    sin2, rho, _ = decision_from_scalars(gl, gg, ll, 1.0)
     return sin2, rho, gg
 
 
@@ -72,9 +105,7 @@ def lbgm_client_step(grad, lbg, delta_threshold, fused: bool = False):
     kernel (see :func:`lbgm_stats`).
     """
     sin2, rho, gg = lbgm_stats(grad, lbg, fused=fused)
-    # sin2 == 1.0 covers both degenerate LBGs (round 0) and orthogonal
-    # gradients — either way a full round is strictly better.
-    scalar = (sin2 <= delta_threshold) & (sin2 < 1.0)
+    scalar = recycle_gate(sin2, delta_threshold)
     g_tilde = tree_select(scalar, tree_scale(lbg, rho), grad)
     new_lbg = tree_select(scalar, lbg, grad)
     m = tree_size(grad)
@@ -245,10 +276,7 @@ def topk_step_core(grad: Dict[str, jax.Array], lbg, delta_threshold,
         gl = jax.lax.psum(gl, psum_axes)
         ll = jax.lax.psum(ll, psum_axes)
         gg = jax.lax.psum(gg, psum_axes)
-    cos2 = (gl * gl) / jnp.maximum(gg * ll, EPS)
-    sin2 = jnp.where(ll > EPS, 1.0 - cos2, 1.0)
-    rho = gl / jnp.maximum(ll, EPS)
-    scalar = (sin2 <= delta_threshold) & (sin2 < 1.0)
+    sin2, rho, scalar = decision_from_scalars(gl, gg, ll, delta_threshold)
 
     g_tilde, new_lbg = {}, {}
     total_k = 0
@@ -269,10 +297,7 @@ def topk_step_core(grad: Dict[str, jax.Array], lbg, delta_threshold,
                 send, g.shape, g.size, k_frac,
                 dtype=g.dtype if out_dtypes else jnp.float32)
         new_lbg[name] = {"idx": keep_idx, "val": keep_val}
-    # full round uplink: k values + k indices ~ 1.5 floats per kept value
-    stats = LBGMStats(sin2=sin2, rho=rho, sent_scalar=scalar,
-                      uplink_floats=jnp.where(scalar, 1.0, 1.5 * total_k),
-                      grad_sq_norm=gg)
+    stats = topk_uplink_stats(sin2, rho, scalar, gg, total_k)
     if sparse_out:
         gscale = jnp.where(scalar, rho, 1.0)
         return (g_tilde, gscale), new_lbg, stats

@@ -22,7 +22,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.lbgm import LBGMStats, _block_layout, topk_step_core
+from repro.core.lbgm import (LBGMStats, _block_layout, _to_blocks,
+                             decision_from_scalars, topk_step_core,
+                             topk_uplink_stats)
 
 # newer jax promotes shard_map to the top level; on the 0.4.x line it
 # lives in jax.experimental. The replication-check kwarg was also renamed
@@ -113,6 +115,137 @@ def make_local_topk_step(delta: float, k_frac: float, *, corr=None,
         return topk_step_core(grads, lbg, delta, k_frac, corr=corr,
                               psum_axes=psum_axes, out_dtypes=out_dtypes,
                               sparse_out=sparse_out, fused=fused)
+    return step
+
+
+def model_shard_rows(nb: int, n_model: int) -> int:
+    """Block rows of an ``(nb, kb)`` block-layout leaf each model rank owns
+    under ``n_model``-way model-axis sharding, or 0 when the leaf cannot
+    shard (``nb`` not divisible — e.g. single-block leaves like biases,
+    which stay replicated and are counted once via a rank-0 gate).
+
+    ``_block_layout`` rounds multi-block ``nb`` up to a multiple of 16
+    precisely so the usual power-of-two model meshes divide it.
+    """
+    if n_model > 1 and nb % n_model == 0:
+        return nb // n_model
+    return 0
+
+
+def bank_model_partition(params_like, k_frac: float,
+                         n_model: int) -> Dict[str, bool]:
+    """name -> whether that leaf's sparse-bank block rows shard over the
+    model axis. The single place the divisibility rule lives: the engine's
+    bank placement (``ShardedScheduler.layout_banks``) and the decision
+    body (:func:`make_mesh_topk_step`) both derive from it, so the bank a
+    device holds is always exactly the rows its decision reads."""
+    return {name: model_shard_rows(_block_layout(leaf.size, k_frac)[0],
+                                   n_model) > 0
+            for name, leaf in params_like.items()}
+
+
+def make_mesh_topk_step(delta: float, k_frac: float, *, n_model: int,
+                        model_axis: str = "model", sparse_out: bool = True,
+                        fused: bool = False):
+    """Per-client Algorithm-1 decision body for the engine's 2-D
+    ``(clients, model)`` mesh: ``fn(grads, lbg) -> ((send, gscale),
+    new_lbg, stats)``.
+
+    This is :func:`make_sharded_topk_step`'s decomposition run along the
+    *model* axis of a mesh the caller is already shard-mapped over (the
+    "sharded" client scheduler), rather than a standalone shard_map:
+
+    * ``n_model == 1`` — exactly :func:`make_local_topk_step`, the fully
+      device-local body (bit-for-bit the 1-D client-mesh path).
+    * ``n_model > 1`` — each model rank processes only its
+      ``nb / n_model`` rows of every leaf's *global* block layout
+      (``jax.lax.axis_index(model_axis)`` picks the slice, matching the
+      rows of the bank shard it holds); the three partial scalars
+      (<g,l>, ||g||^2, ||l||^2) are ``psum``-reduced over ``model_axis``.
+      Leaves whose ``nb`` does not divide (see
+      :func:`bank_model_partition`) are processed whole on every rank and
+      gated to rank 0 before the psum — counted exactly once, with no
+      replication-correction division to round.
+
+    The *global* block layout (and therefore ``stats.uplink_floats``) is
+    mesh-shape independent: every mesh shape reports identical uplink
+    accounting. Only ``sparse_out=True`` is supported for ``n_model > 1``
+    (the dense g_tilde scatter would need a cross-rank leaf assembly; the
+    engine's sparse aggregation contract never materializes it).
+    """
+    if n_model == 1:
+        return make_local_topk_step(delta, k_frac, sparse_out=sparse_out,
+                                    fused=fused)
+    if not sparse_out:
+        raise ValueError(
+            "make_mesh_topk_step: model-axis sharding (n_model > 1) "
+            "requires the sparse aggregation contract (sparse_out=True); "
+            "the dense per-client g_tilde cannot be assembled device-local")
+
+    def step(grads, lbg):
+        if fused:
+            from repro.kernels.ops import lbgm_sparse_decision
+        rank = jax.lax.axis_index(model_axis)
+        gl = jnp.zeros((), jnp.float32)
+        ll = jnp.zeros((), jnp.float32)
+        gg = jnp.zeros((), jnp.float32)
+        local = {}     # per-leaf local block rows (or fused (ti, tv))
+        total_k = 0    # GLOBAL kept-entry count: mesh-independent uplink
+        for name, g in grads.items():
+            sl = lbg[name]
+            nb, block, kb = _block_layout(g.size, k_frac)
+            total_k += nb * kb
+            nb_l = sl["idx"].shape[0]
+            sharded = nb_l != nb
+            assert nb_l == (nb // n_model if sharded else nb), (
+                name, nb_l, nb, n_model)
+            bl = _to_blocks(g, nb, block)
+            if sharded:
+                bl = jax.lax.dynamic_slice_in_dim(bl, rank * nb_l, nb_l,
+                                                  axis=0)
+            if fused:
+                gg_leaf, gv, ti, tv = lbgm_sparse_decision(bl, sl["idx"])
+                local[name] = (ti, tv)
+            else:
+                gv = jnp.take_along_axis(bl, sl["idx"], axis=1)
+                gg_leaf = jnp.vdot(bl, bl)
+                local[name] = bl
+            pgl = jnp.vdot(gv, sl["val"])
+            pll = jnp.vdot(sl["val"], sl["val"])
+            pgg = gg_leaf
+            if not sharded:
+                # replicated leaf: every rank computed the same full-leaf
+                # partials — count them once, exactly (a rank-0 gate, not
+                # a 1/n division the psum would have to un-round)
+                own = (rank == 0).astype(jnp.float32)
+                pgl, pll, pgg = pgl * own, pll * own, pgg * own
+            gl, ll, gg = gl + pgl, ll + pll, gg + pgg
+        gl = jax.lax.psum(gl, model_axis)
+        ll = jax.lax.psum(ll, model_axis)
+        gg = jax.lax.psum(gg, model_axis)
+        # the decision rule itself lives in ONE place (core.lbgm) — this
+        # decomposition only changed how the three scalars were reduced
+        sin2, rho, scalar = decision_from_scalars(gl, gg, ll, delta)
+
+        send, new_lbg = {}, {}
+        for name, g in grads.items():
+            sl = lbg[name]
+            kb = sl["idx"].shape[1]
+            if fused:
+                ti, tv = local[name]
+            else:
+                bl = local[name]
+                _, ti = jax.lax.top_k(jnp.abs(bl), kb)
+                tv = jnp.take_along_axis(bl, ti, axis=1)
+                ti = ti.astype(jnp.int32)
+            keep = {"idx": jnp.where(scalar, sl["idx"], ti),
+                    "val": jnp.where(scalar, sl["val"], tv)}
+            send[name] = keep
+            new_lbg[name] = keep
+        stats = topk_uplink_stats(sin2, rho, scalar, gg, total_k)
+        gscale = jnp.where(scalar, rho, 1.0)
+        return (send, gscale), new_lbg, stats
+
     return step
 
 

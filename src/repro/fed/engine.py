@@ -22,12 +22,17 @@ declarative ``ExperimentSpec`` API builds on):
      ``chunk_size`` (never more memory than requested, no wasted compute);
      when K is near-prime and that divisor would be tiny, the engine keeps
      ``chunk_size`` and zero-weight pads the last block instead.
-   * ``"sharded"`` — the chunked layout with each block's client axis
-     additionally mapped over a 1-D device mesh via ``shard_map``
-     (``FLConfig.mesh`` devices, resolved through
-     ``launch.mesh.make_client_mesh``). Per-device transient memory is
-     O(chunk·M / n_devices) and the chunk's clients train on all devices
-     concurrently — the scale axis for 512+ client cohorts.
+   * ``"sharded"`` — the chunked layout with each block additionally
+     mapped over the named 2-D ``(clients, model)`` FL mesh via
+     ``shard_map`` (``FLConfig.mesh`` spec — ``None``/``int n``/``[c, m]``
+     — resolved through ``launch.mesh.make_fl_mesh``). The chunk's client
+     axis shards over ``clients`` (per-device transient memory
+     O(chunk·M / c), all clients of a chunk training concurrently — the
+     scale axis for 512+ client cohorts); with ``m > 1`` the sparse LBG
+     bank, the Algorithm-1 decision, and the aggregation carry
+     additionally shard their block rows over ``model`` (per-device bank
+     bytes O(K·k_frac·M / (c·m)) — the memory axis for the >=34B archs,
+     where the look-back bank dominates).
 
    All schedulers accumulate the server aggregate through the engine's
    *aggregator* with the *same* strictly sequential per-client ``lax.scan``
@@ -115,7 +120,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.comm.accounting import CommLedger
 from repro.compression import make_uplink_pipeline
 from repro.core import lbgm as lbgm_lib
-from repro.core.lbgm_sharded import _SM_KW, _shard_map, make_local_topk_step
+from repro.core.lbgm_sharded import (_SM_KW, _shard_map,
+                                     bank_model_partition,
+                                     make_local_topk_step,
+                                     make_mesh_topk_step)
 from repro.core.tree_math import tree_size, tree_zeros_like
 from repro.fed.flconfig import FLConfig  # noqa: F401  (re-export)
 from repro.fed.registry import (LBG_STORES, SCHEDULERS, register_lbg_store,
@@ -227,35 +235,55 @@ class TopKLBGStore:
 
 
 class ShardedTopKLBGStore(TopKLBGStore):
-    """Sparse (idx, val) bank laid out for client-axis sharding.
+    """Sparse (idx, val) bank laid out for mesh sharding.
 
     Same bank shapes and cost model as :class:`TopKLBGStore`, but the
     accept/recycle decision goes through
-    ``repro.core.lbgm_sharded.make_local_topk_step`` — the shared
-    device-local body of the shard_map variant (``topk_step_core``) — with
-    no psum: under the ``"sharded"`` scheduler each device holds its local
-    clients' full dense gradients *and* their bank rows (the bank is placed
-    along the client mesh axis by ``ShardedScheduler.layout_banks``), so
-    the decision never crosses devices and per-client cross-device traffic
-    stays at the three aggregate-psum scalars. Numerically identical to
-    ``TopKLBGStore`` (both run ``topk_step_core``), so the two stores are
-    interchangeable bit-for-bit on any scheduler.
+    ``repro.core.lbgm_sharded.make_mesh_topk_step`` — the decision body of
+    the 2-D ``(clients, model)`` mesh:
+
+    * along the *client* axis the bank rows live on the device that trains
+      their client (placed by ``ShardedScheduler.layout_banks``), so the
+      per-client decision adds zero cross-device traffic;
+    * with ``n_model > 1`` each leaf's block rows additionally shard over
+      the *model* axis (where ``nb`` divides — see
+      ``bank_model_partition``): every model rank gathers/top-ks only its
+      own rows of the gradient's global block layout and the three
+      decision scalars are psum-reduced over ``model`` before the
+      accept/recycle branch. Per-device bank bytes drop to
+      O(K·k_frac·M / (n_clients·n_model)).
+
+    On ``n_model == 1`` this is exactly ``make_local_topk_step`` (no psum
+    at all), numerically identical to ``TopKLBGStore`` — the two stores
+    are interchangeable bit-for-bit on any scheduler.
     """
 
     def __init__(self, delta_threshold: float, k_frac: float = 0.1,
-                 fused: bool = False):
+                 fused: bool = False, n_model: int = 1,
+                 model_axis: str = "model"):
         super().__init__(delta_threshold, k_frac, fused=fused)
+        self.n_model = int(n_model)
+        self.model_axis = model_axis
+        # dense g_tilde path (fused_kernels=False, dense aggregation):
+        # always the full-leaf device-local step — with n_model > 1 the
+        # banks stay model-replicated and every rank decides identically
         self._step = make_local_topk_step(delta_threshold, k_frac,
                                           fused=fused)
-        self._sparse_step = make_local_topk_step(delta_threshold, k_frac,
-                                                 sparse_out=True,
-                                                 fused=fused)
+        self._sparse_step = make_mesh_topk_step(
+            delta_threshold, k_frac, n_model=self.n_model,
+            model_axis=model_axis, sparse_out=True, fused=fused)
 
     def client_step(self, grad, lbg_k):
         return self._step(grad, lbg_k)
 
     def sparse_client_step(self, grad, lbg_k):
         return self._sparse_step(grad, lbg_k)
+
+    def bank_model_partition(self, params) -> Dict[str, bool]:
+        """name -> whether that leaf's bank block rows shard over the
+        model axis (the scheduler's placement and this store's decision
+        slicing share the one rule in ``core.lbgm_sharded``)."""
+        return bank_model_partition(params, self.k_frac, self.n_model)
 
 
 def _lbg_kw(cfg: FLConfig) -> dict:
@@ -267,6 +295,12 @@ def _lbg_kw(cfg: FLConfig) -> dict:
         raise ValueError(
             "FLConfig.lbg_kw: 'fused' is engine-controlled — set "
             "FLConfig.fused_kernels instead of passing it to the store")
+    for reserved in ("n_model", "model_axis"):
+        if reserved in kw:
+            raise ValueError(
+                f"FLConfig.lbg_kw: {reserved!r} is engine-controlled — "
+                "the model axis comes from FLConfig.mesh ([clients, "
+                "model]), not from store kwargs")
     return kw
 
 
@@ -281,6 +315,7 @@ register_lbg_store("topk")(
 register_lbg_store("topk-sharded")(
     lambda cfg: ShardedTopKLBGStore(cfg.delta_threshold,
                                     fused=resolve_fused_kernels(cfg),
+                                    n_model=cfg.mesh_model_dim,
                                     **_lbg_kw(cfg)))
 
 
@@ -527,53 +562,101 @@ def pick_sharded_chunk(num_clients: int, chunk_size: int, n_dev: int) -> int:
 
 @register_scheduler("sharded")
 class ShardedScheduler(ChunkedScheduler):
-    """Chunked layout with each block's client axis mapped over a device
-    mesh: the same (n_chunks, chunk) ``lax.scan``, but every chunk's
-    clients train data-parallel under ``shard_map`` on a 1-D client mesh
-    (``FLConfig.mesh`` devices, resolved by ``launch.mesh.make_client_mesh``),
-    so the per-DEVICE transient set is O(chunk·M / n_devices).
+    """Chunked layout with each block mapped over the 2-D ``(clients,
+    model)`` FL mesh: the same (n_chunks, chunk) ``lax.scan``, but every
+    chunk's clients train data-parallel under ``shard_map`` along the
+    ``clients`` axis (``FLConfig.mesh``, resolved by
+    ``launch.mesh.make_fl_mesh``), so the per-DEVICE transient set is
+    O(chunk·M / n_clients_dev); with a 2-D spec (``mesh=[c, m]``) the
+    LBGM decision and the sparse banks/aggregator carry additionally
+    shard their block rows over the ``model`` axis, dropping per-device
+    bank bytes to O(K·k_frac·M / (c·m)) for the >=34B-style configs where
+    the look-back bank dominates memory.
 
     State banks are stored ``(n_chunks, chunk, ...)`` with the chunk's
-    client axis sharded over the mesh (see :meth:`layout_banks`), so the
-    per-chunk bank slice/update and the LBGM accept/recycle decision are
-    entirely device-local; the only cross-device traffic per chunk is one
-    fp32 psum of the weighted aggregate (plus loss/uplink scalars).
+    client axis sharded over the mesh — and, for a model-sharded sparse
+    bank (see :meth:`configure_store` / ``bank_model_partition``), the
+    block-row axis over ``model`` — so the per-chunk bank slice/update
+    and the LBGM accept/recycle decision read only device-local rows; the
+    cross-device traffic per chunk is one fp32 psum of the weighted
+    aggregate along ``clients`` (plus loss/uplink scalars) and, when
+    model-sharded, the three decision scalars psum'd along ``model``
+    inside the store's step.
 
-    Device 0 folds the scan carry into its local strictly-sequential
-    accumulation, so on a 1-device mesh the addition order — and therefore
-    the whole round history — is bit-identical to ``ChunkedScheduler``;
-    on larger meshes the psum reassociates the sum across devices, which is
-    the documented fp32-tolerance difference (uplink accounting is still
-    exact: the per-client decision never crosses devices).
+    Device 0 of the client axis folds the scan carry into its local
+    strictly-sequential accumulation, so on a (1, 1) mesh the addition
+    order — and therefore the whole round history — is bit-identical to
+    ``ChunkedScheduler`` (and an ``(n, 1)`` mesh is bit-identical to the
+    pre-2-D 1-D client mesh); on larger meshes the psum reassociates the
+    sum across devices, the documented fp32-tolerance difference (uplink
+    accounting is still exact: the global block layout is mesh-shape
+    independent).
     """
 
     AXIS = "clients"
+    MODEL_AXIS = "model"
 
     def __init__(self, cfg: FLConfig, num_clients: int):
-        from repro.launch.mesh import make_client_mesh
-        self.mesh = make_client_mesh(cfg.mesh, axis=self.AXIS)
+        from repro.launch.mesh import make_fl_mesh
+        self.mesh = make_fl_mesh(cfg.mesh, client_axis=self.AXIS,
+                                 model_axis=self.MODEL_AXIS)
+        self.n_client_dev = int(self.mesh.shape[self.AXIS])
+        self.n_model = int(self.mesh.shape[self.MODEL_AXIS])
         self.n_dev = int(self.mesh.devices.size)
         self.num_clients = num_clients
         self.chunk = pick_sharded_chunk(num_clients, cfg.chunk_size,
-                                        self.n_dev)
+                                        self.n_client_dev)
         self.pad = (-num_clients) % self.chunk
+        # set by configure_store when the LBG bank model-shards: per-leaf
+        # {name: bool} for the sparse bank's block rows, mirrored onto the
+        # aggregator carry; None = everything model-replicated (the 1-D
+        # client-mesh behavior)
+        self._msharded: Optional[Dict[str, bool]] = None
+
+    # ----------------------------------------------------- model binding
+    def configure_store(self, store, sparse_agg: bool, params) -> None:
+        """Record which bank/aggregator leaves shard over ``model``.
+
+        Model sharding is on only when all three hold: a 2-D mesh was
+        requested, the engine picked sparse aggregation (the dense
+        g_tilde path cannot assemble leaves across model ranks), and the
+        store knows how to partition its bank
+        (``store.bank_model_partition``). Otherwise the model axis has
+        extent >= 1 but everything on it is replicated — bit-for-bit the
+        pre-2-D behavior.
+        """
+        if (self.n_model > 1 and sparse_agg
+                and hasattr(store, "bank_model_partition")):
+            self._msharded = store.bank_model_partition(params)
+
+    def _bank_leaf_spec(self, path, chunk_leading: bool):
+        """PartitionSpec for one bank leaf; ``path`` is the jax key path
+        ((name,) for a dense bank leaf, (name, 'idx'|'val') for a sparse
+        one). ``chunk_leading=True`` adds the scan's n_chunks axis."""
+        ms = self._msharded or {}
+        name = path[0].key if path else None
+        axes = (self.AXIS,)
+        if len(path) == 2 and ms.get(name):
+            axes = (self.AXIS, self.MODEL_AXIS)
+        return P(None, *axes) if chunk_leading else P(*axes)
 
     # ------------------------------------------------------ bank placement
     def layout_banks(self, bank):
-        """(Kp, ...) bank -> (n_chunks, chunk, ...), client axis sharded.
+        """(Kp, ...) bank -> (n_chunks, chunk, ...), client axis sharded
+        (block-row axis too, for a model-sharded sparse bank).
 
         The round scan indexes whole chunks (axis 0), so sharding axis 1
         over the mesh puts every chunk's bank rows exactly where its
         clients train — per-chunk slice/update never moves bank bytes
         between devices."""
-        def f(x):
+        def f(path, x):
             x = x.reshape((x.shape[0] // self.chunk, self.chunk)
                           + x.shape[1:])
             if self.n_dev > 1:
-                x = jax.device_put(
-                    x, NamedSharding(self.mesh, P(None, self.AXIS)))
+                x = jax.device_put(x, NamedSharding(
+                    self.mesh, self._bank_leaf_spec(path, True)))
             return x
-        return jax.tree.map(f, bank)
+        return jax.tree_util.tree_map_with_path(f, bank)
 
     def run(self, client_fn, agg, params, batch, lbg, resid, w, maskf):
         K, chunk, pad, ax = self.num_clients, self.chunk, self.pad, self.AXIS
@@ -583,15 +666,26 @@ class ShardedScheduler(ChunkedScheduler):
         Kp = K + pad
         n_chunks = Kp // chunk
         rep, cl = P(), P(ax)
+        # per-leaf specs: sparse-bank leaves may shard block rows over the
+        # model axis; the aggregator carry mirrors the same partition (its
+        # (nb, block) leaves hold the rows the local sends scatter into)
+        ms = self._msharded
+        lbg_specs = jax.tree_util.tree_map_with_path(
+            lambda path, _: self._bank_leaf_spec(path, False), lbg) \
+            if ms else cl
+        acc_specs = {name: P(self.MODEL_AXIS) if on else rep
+                     for name, on in ms.items()} if ms else rep
 
         def local_chunk(acc, p, b, l, r, w_c, m_c):
             gt, nl, nr, loss, uplink, scalar = jax.vmap(
                 lambda bb, ll, rr: client_fn(p, bb, ll, rr))(b, l, r)
-            # device 0 seeds its local accumulation with the scan carry, so
-            # each chunk folds into the aggregate in the same strictly
-            # sequential order as ChunkedScheduler; the psum is the
-            # identity on a 1-device mesh (the carry — dense params-shaped
-            # or sparse block-layout, per the aggregator — is replicated)
+            # client-device 0 seeds its local accumulation with the scan
+            # carry, so each chunk folds into the aggregate in the same
+            # strictly sequential order as ChunkedScheduler; the psum is
+            # the identity on a 1-device client axis (the carry — dense
+            # params-shaped or sparse block-layout, per the aggregator —
+            # is replicated along `clients`; model-sharded carry leaves
+            # hold disjoint rows per model rank, never summed over model)
             first = jax.lax.axis_index(ax) == 0
             acc = jax.tree.map(lambda a: jnp.where(first, a, 0.0), acc)
             acc = jax.lax.psum(agg.accumulate(acc, w_c, gt), ax)
@@ -600,8 +694,8 @@ class ShardedScheduler(ChunkedScheduler):
 
         sharded_chunk = _shard_map(
             local_chunk, mesh=self.mesh,
-            in_specs=(rep, rep, cl, cl, cl, cl, cl),
-            out_specs=(rep, cl, cl, cl, cl, cl), **_SM_KW)
+            in_specs=(acc_specs, rep, cl, lbg_specs, cl, cl, cl),
+            out_specs=(acc_specs, lbg_specs, cl, cl, cl, cl), **_SM_KW)
 
         idx_at = lambda t, i: jax.tree.map(
             lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False),
@@ -683,6 +777,11 @@ class FLEngine:
         # store supports it and fused_kernels is not explicitly False
         self.agg, self._sparse_agg = make_aggregator(flcfg, self.store,
                                                      params)
+        # 2-D (clients, model) mesh: the scheduler decides — with the
+        # store — which bank/aggregator leaves shard over the model axis,
+        # BEFORE the banks are laid out below
+        if hasattr(self.sched, "configure_store"):
+            self.sched.configure_store(self.store, self._sparse_agg, params)
         # banks are allocated padded to the chunk grid once, up front; the
         # phantom rows stay zero forever (their mask is always 0), so the
         # per-round scan updates them in place with no pad/slice copies

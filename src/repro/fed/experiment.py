@@ -398,6 +398,29 @@ def _cnn_model(seed: int = 0, arch: str = "paper-cnn", **arch_overrides):
                              **arch_overrides)
 
 
+@register_model("lm")
+def _lm_model(seed: int = 0, arch: str = "qwen3-1.7b", reduced: bool = True,
+              **arch_overrides):
+    """Next-token LM on one of the assigned large archs (``repro.configs``
+    names: yi-34b, deepseek-67b, ...), default ``reduced()`` so the spec
+    runs on a CPU container; drop ``reduced`` on real accelerators. This
+    is the large-arch entry into the declarative API — the 2-D
+    ``(clients, model)`` mesh example in ``examples/`` runs a reduced
+    yi-34b through it."""
+    import jax
+    from repro.configs import get_config
+    from repro.models.transformer import init_lm, lm_loss
+
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    if arch_overrides:
+        cfg = dataclasses.replace(cfg, **arch_overrides)
+    params, _ = init_lm(jax.random.PRNGKey(seed), cfg)
+    loss_fn = lambda p, b: lm_loss(p, cfg, b["tokens"], b["labels"])
+    return params, loss_fn
+
+
 @register_dataset("mixture")
 def _mixture_dataset(n: int = 2000, n_eval: int = 500, num_classes: int = 10,
                      seed: int = 0, noise: float = 0.35):
@@ -406,6 +429,20 @@ def _mixture_dataset(n: int = 2000, n_eval: int = 500, num_classes: int = 10,
     x, y = mixture_classification(n + n_eval, num_classes, seed=seed,
                                   noise=noise)
     return ({"x": x[:n], "y": y[:n]}, {"x": x[n:], "y": y[n:]})
+
+
+@register_dataset("markov")
+def _markov_dataset(n: int = 256, n_eval: int = 64, seq_len: int = 32,
+                    vocab: int = 512, seed: int = 0, branching: int = 4):
+    """Markov-chain LM stream (the large-arch training driver's data):
+    each token has ``branching`` likely successors — learnable structure
+    for the ``"lm"`` model component. ``vocab`` must match the arch's
+    (reduced archs clamp to 512)."""
+    from repro.data.synthetic import markov_lm
+    toks, labels = markov_lm(n + n_eval, seq_len, vocab, seed=seed,
+                             branching=branching)
+    return ({"tokens": toks[:n], "labels": labels[:n]},
+            {"tokens": toks[n:], "labels": labels[n:]})
 
 
 @register_partitioner("label_skew")

@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple, Union
 
 #: legacy spelling used by the arch-side LBGMConfig ("full" dense bank)
 _LBG_VARIANT_ALIASES = {"full": "dense"}
@@ -50,9 +50,16 @@ class FLConfig:
     seed: int = 0
     scheduler: str = "vmap"          # registry key: vmap | chunked | ...
     chunk_size: int = 16             # max clients per lax.scan block
-    mesh: Optional[int] = None       # "sharded" scheduler: device count for
-                                     # the client mesh (None = all local
-                                     # devices; resolved by launch/mesh.py)
+    mesh: Union[None, int, list] = None
+    # ^ "sharded" scheduler: the 2-D (clients, model) device-mesh spec,
+    #   resolved to a live named Mesh by ``launch.mesh.make_fl_mesh``.
+    #   Three JSON-able spellings, all lossless through to_dict/from_dict:
+    #     None     -> every local device on the client axis: (n_local, 1)
+    #     int n    -> (n, 1) — the pre-2-D spelling; existing specs/CLIs
+    #                 round-trip unchanged and run bit-for-bit identically
+    #     [c, m]   -> c-way client-data-parallel x m-way model-axis
+    #                 sharding of the LBG decision/banks (tuples are
+    #                 normalized to lists so equality survives a JSON trip)
     lbg_variant: str = "dense"       # registry key: dense | topk | null | ...
     lbg_kw: Optional[dict] = None    # e.g. {"k_frac": 0.1} for topk
     fused_kernels: Optional[bool] = None
@@ -80,11 +87,31 @@ class FLConfig:
             bad(f"sample_frac must be in (0, 1], got {self.sample_frac}")
         if self.chunk_size < 1:
             bad(f"chunk_size must be >= 1, got {self.chunk_size}")
-        # mesh stays a plain int (device count) so the config — and any
-        # ExperimentSpec embedding it — remains JSON-serializable; the
-        # sharded scheduler resolves it to a live Mesh at engine build
-        if self.mesh is not None and self.mesh < 1:
-            bad(f"mesh must be None or a device count >= 1, got {self.mesh}")
+        # mesh stays a plain JSON value (None, int, or a 2-list) so the
+        # config — and any ExperimentSpec embedding it — remains
+        # JSON-serializable; the sharded scheduler resolves it to a live
+        # 2-D (clients, model) Mesh at engine build. bools are ints in
+        # Python, so reject them explicitly.
+        def int_ge1(x):
+            return isinstance(x, int) and not isinstance(x, bool) and x >= 1
+        if self.mesh is not None:
+            if isinstance(self.mesh, (list, tuple)):
+                if len(self.mesh) != 2 or not all(int_ge1(d)
+                                                  for d in self.mesh):
+                    bad("mesh must be None, a client-device count >= 1, or "
+                        "a [clients, model] pair of device counts >= 1 — "
+                        f"got {self.mesh!r}")
+                # canonicalize to a list: to_dict/JSON round-trips compare
+                # equal no matter which sequence type the caller used
+                object.__setattr__(self, "mesh", [int(d) for d in self.mesh])
+            elif not int_ge1(self.mesh):
+                bad("mesh must be None, a client-device count >= 1, or a "
+                    f"[clients, model] pair — got {self.mesh!r}")
+        if self.mesh_model_dim > 1 and self.scheduler in ("vmap", "chunked"):
+            bad(f"mesh={self.mesh!r} asks for model-axis sharding but "
+                f"scheduler={self.scheduler!r} is mesh-unaware; use "
+                "scheduler='sharded' (the only built-in that runs the 2-D "
+                "(clients, model) mesh)")
         # identity check, not `in`: 0/1 compare == to False/True but would
         # silently miss the `is not False` gate in the engine's aggregator
         # selection — reject them with the fix in the message
@@ -110,6 +137,25 @@ class FLConfig:
     @property
     def resolved_lbg_variant(self) -> str:
         return _LBG_VARIANT_ALIASES.get(self.lbg_variant, self.lbg_variant)
+
+    @property
+    def mesh_shape(self) -> Optional[Tuple[int, int]]:
+        """The (clients, model) mesh shape, or None for "every local
+        device on the client axis" (resolved at engine build, where the
+        device count is known). An int spec is exactly ``(n, 1)``."""
+        if self.mesh is None:
+            return None
+        if isinstance(self.mesh, int):
+            return (self.mesh, 1)
+        return (self.mesh[0], self.mesh[1])
+
+    @property
+    def mesh_model_dim(self) -> int:
+        """Model-axis extent of the mesh (1 unless a 2-D spec asks for
+        model sharding) — importable without jax, so stores/validators can
+        branch on it before any device exists."""
+        shape = self.mesh_shape
+        return 1 if shape is None else shape[1]
 
     def replace(self, **overrides) -> "FLConfig":
         return dataclasses.replace(self, **overrides)

@@ -13,10 +13,14 @@ bootstraps a spec file you can edit and feed back in. ``--set`` takes
 dotted keys into the spec (``fl.*``, ``model.kw.*``, ...); values parse as
 JSON when possible, else as strings.
 
-Multi-device client parallelism rides the same knobs: ``--set
+Multi-device execution rides the same knobs: ``--set
 fl.scheduler=sharded --set fl.mesh=4`` runs each chunk's clients
-data-parallel on a 4-device client mesh (force host devices with
-``XLA_FLAGS=--xla_force_host_platform_device_count=4`` on CPU).
+data-parallel on a 4-device client mesh, and ``--set "fl.mesh=[2,4]"``
+asks for the 2-D (clients, model) mesh — 2-way client parallelism with
+the LBGM banks/decision sharded 4 ways along the model axis (an int
+mesh ``n`` is exactly ``[n, 1]``; force host devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU). See
+``examples/specs/yi34b_mesh2x4.json`` for a full 2-D large-arch spec.
 """
 from __future__ import annotations
 

@@ -19,6 +19,21 @@ accumulator init at ``row == 0`` is correct under the sequential TPU grid.
 
 Validated against ``kernels/ref.py`` in interpret mode (tests); on TPU the
 win is structural — one HBM read of g instead of three.
+
+Mosaic-safety fallback (ROADMAP open item): the default kernel leans on
+``lax.top_k`` and ``take_along_axis`` *inside* the kernel body, whose
+Mosaic lowering has not been exercised on real TPU hardware. The
+``two_pass`` variant below removes both: pass 1 bisects the per-row
+top-k |value| threshold exactly — in int32 IEEE bit space, so every
+magnitude regime resolves — with nothing but bitcasts, compares and
+sums; pass 2
+compacts the selected entries (and gathers the LBG positions) with tiled
+one-hot matmuls — iota / compare / select / dot / fori_loop only, the
+op set Mosaic lowers everywhere. Same one-HBM-read structure, same
+outputs as a *set* per row (slot order is by index, not descending
+value; every consumer treats the (idx, val) pairs as a set). Enable with
+``REPRO_LBGM_TWO_PASS_TOPK=1`` (see ``kernels.ops.lbgm_sparse_decision``)
+if the default kernel fails to compile or mis-lowers on hardware.
 """
 from __future__ import annotations
 
@@ -94,5 +109,173 @@ def lbgm_sparse_decision_pallas(blocks: jax.Array, idx: jax.Array,
     """Unbatched view of the fused decision: blocks (nb, block),
     idx (nb, kb) -> (gg scalar, gathered, top_idx, top_val)."""
     gg, gath, ti, tv = lbgm_sparse_decision_batched_pallas(
+        blocks[None], idx[None], interpret=interpret)
+    return gg[0], gath[0], ti[0], tv[0]
+
+
+# ---------------------------------------- two-pass threshold-select variant
+
+#: pass-2 compaction tile (lanes per one-hot matmul); multiples of 128
+#: keep the dynamic lane slices MXU/VPU aligned
+TWO_PASS_TILE = 512
+#: bisection steps for the per-row top-k threshold. The bisection runs on
+#: the int32 IEEE bit patterns of |g| (monotone in value for non-negative
+#: floats), so 32 integer halvings of [-1, bits(max)] always terminate
+#: with lo/hi ADJACENT — hi is exactly the kb-th largest |value|'s bit
+#: pattern and the tie band holds only exact ties, at every magnitude
+#: (a float-interval bisection has absolute resolution ~max/2^iters and
+#: silently mis-selects rows whose |values| all sit below it)
+TWO_PASS_BISECT_ITERS = 32
+
+
+def _two_pass_kernel(g_ref, idx_ref, gg_ref, gath_ref, ti_ref, tv_ref, *,
+                     tile: int, iters: int):
+    """Sort-free / gather-free fused decision (see module docstring).
+
+    Per (client, block-row) grid step: bisect the row's kb-th largest
+    |value| (pass 1: compares + sums only), then one tiled sweep (pass 2)
+    emits the compacted top-k entries, the values gathered at the LBG
+    positions, and the row's ||g||^2 partial — all through one-hot
+    matmuls, so nothing in the body needs a sort or a dynamic gather.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        gg_ref[...] = jnp.zeros_like(gg_ref)
+
+    g = g_ref[...].reshape(1, -1).astype(jnp.float32)   # (1, Bp)
+    idx = idx_ref[...].reshape(1, -1)                   # (1, kb)
+    kb = idx.shape[1]
+    Bp = g.shape[1]
+    a = jnp.abs(g)
+    gg_ref[...] += jnp.sum(g * g).reshape(1, 1)
+
+    # ---- pass 1: bisect t* (the kb-th largest |value|) into (lo, hi] —
+    # in IEEE BIT space: for non-negative f32 the int32 bit pattern is
+    # monotone in value, so integer halvings of [-1, bits(max)] converge
+    # to ADJACENT lo/hi in <= 32 steps. hi is then exactly t*'s bit
+    # pattern: the "tie band" (lo, hi] holds only exact t* ties, for
+    # subnormal-scale rows as much as unit-scale ones. Invariant:
+    # count(ai > lo) >= kb > count(ai > hi) (ai >= 0 everywhere, so the
+    # initial lo = -1 count is Bp >= kb; count(ai > max) == 0 < kb).
+    ai = jax.lax.bitcast_convert_type(a, jnp.int32)     # (1, Bp), >= 0
+
+    def bis(_, lh):
+        lo, hi = lh
+        # lo + (hi - lo)//2, NOT (lo + hi)//2: bit patterns of values
+        # >= 2.0 exceed 2^30, so the naive midpoint overflows int32
+        mid = lo + (hi - lo) // 2
+        big = jnp.sum((ai > mid).astype(jnp.float32)) >= kb
+        return (jnp.where(big, mid, lo), jnp.where(big, hi, mid))
+
+    lo, hi = jax.lax.fori_loop(
+        0, iters, bis, (jnp.int32(-1), jnp.max(ai)))
+    # "definite" entries sit strictly above the band; ties (== t*) fill
+    # the remaining slots in index order — exactly lax.top_k's
+    # lowest-index tie rule, and for rows with fewer than kb nonzeros the
+    # band is the zeros, so every nonzero is still kept
+    m = jnp.sum((ai > hi).astype(jnp.float32))          # < kb by invariant
+
+    # ---- pass 2: tiled compaction + gather (one-hot matmuls)
+    n_tiles = Bp // tile
+    # inclusive-cumsum operator: mask (1, T) @ tri (T, T) with
+    # tri[i, j] = (i <= j)
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 0)
+           <= jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 1)
+           ).astype(jnp.float32)
+    slot_iota = jax.lax.broadcasted_iota(jnp.float32, (tile, kb), 1)
+    lane_iota = jax.lax.broadcasted_iota(jnp.float32, (1, tile), 1)
+    idx_f = idx.astype(jnp.float32)
+
+    def tl(t, carry):
+        cdef, ctie, tiv, tvv, gv = carry
+        g_t = jax.lax.dynamic_slice(g, (0, t * tile), (1, tile))
+        # classify in the same bit space the threshold lives in (lo may
+        # be -1, which is not a valid float to compare against)
+        ai_t = jax.lax.bitcast_convert_type(jnp.abs(g_t), jnp.int32)
+        dmask = (ai_t > hi).astype(jnp.float32)         # (1, T)
+        smask = ((ai_t > lo) & (ai_t <= hi)).astype(jnp.float32)
+        cum_d = jax.lax.dot(dmask, tri) + cdef          # running 1-indexed
+        cum_t = jax.lax.dot(smask, tri) + ctie          # rank per class
+        # output slot (1-indexed; 0 = unselected): definites first (their
+        # global count m < kb), then ties; slots > kb match no one-hot
+        # column below, which is the cap
+        slot = dmask * cum_d + smask * (m + cum_t)
+        oh = ((slot[0][:, None] == slot_iota + 1.0)
+              & ((dmask + smask)[0][:, None] > 0)).astype(jnp.float32)
+        pos = jnp.float32(t * tile) + lane_iota         # global positions
+        tvv = tvv + jax.lax.dot(g_t, oh)                # (1, kb)
+        tiv = tiv + jax.lax.dot(pos, oh)
+        # gather at the LBG positions: positions < 2^24, exact in f32
+        oh2 = (pos[0][:, None] == idx_f[0][None, :]).astype(jnp.float32)
+        gv = gv + jax.lax.dot(g_t, oh2)
+        return (cdef + jnp.sum(dmask), ctie + jnp.sum(smask), tiv, tvv, gv)
+
+    zk = jnp.zeros((1, kb), jnp.float32)
+    _, _, tiv, tvv, gv = jax.lax.fori_loop(
+        0, n_tiles, tl, (jnp.float32(0), jnp.float32(0), zk, zk, zk))
+    gath_ref[...] = gv.reshape(1, 1, kb)
+    ti_ref[...] = tiv.astype(jnp.int32).reshape(1, 1, kb)
+    tv_ref[...] = tvv.reshape(1, 1, kb)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lbgm_sparse_decision_two_pass_batched_pallas(
+        blocks: jax.Array, idx: jax.Array,
+        interpret: Optional[bool] = None):
+    """Two-pass threshold-select twin of
+    :func:`lbgm_sparse_decision_batched_pallas` (same signature, same
+    contract) with the per-row (idx, val) set emitted in *index* order
+    instead of descending |value| — every consumer treats it as a set.
+
+    The lane axis is zero-padded up to a tile multiple before the call;
+    pass 1's strict compares never select a pad zero ahead of real data
+    (pads sit at the highest positions, and a row holds at least
+    ``block >= kb`` real entries), and pad contributions to ||g||^2 are
+    exact zeros.
+    """
+    if interpret is None:
+        from repro.kernels.ops import _default_interpret
+        interpret = _default_interpret()
+    assert blocks.ndim == 3 and idx.ndim == 3
+    assert blocks.shape[:2] == idx.shape[:2]
+    B, nb, block = blocks.shape
+    kb = idx.shape[2]
+    tile = min(TWO_PASS_TILE, block)
+    pad = (-block) % tile
+    if pad:
+        blocks = jnp.pad(blocks, ((0, 0), (0, 0), (0, pad)))
+    Bp = block + pad
+    kernel = functools.partial(_two_pass_kernel, tile=tile,
+                               iters=TWO_PASS_BISECT_ITERS)
+    gg, gath, ti, tv = pl.pallas_call(
+        kernel,
+        grid=(B, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, Bp), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, 1, kb), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, 1, kb), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, 1, kb), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, 1, kb), lambda b, j: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, nb, kb), jnp.float32),
+            jax.ShapeDtypeStruct((B, nb, kb), jnp.int32),
+            jax.ShapeDtypeStruct((B, nb, kb), jnp.float32),
+        ],
+        interpret=interpret,
+    )(blocks, idx)
+    return gg[:, 0], gath, ti, tv
+
+
+def lbgm_sparse_decision_two_pass_pallas(blocks: jax.Array, idx: jax.Array,
+                                         interpret: Optional[bool] = None):
+    """Unbatched view of the two-pass fused decision."""
+    gg, gath, ti, tv = lbgm_sparse_decision_two_pass_batched_pallas(
         blocks[None], idx[None], interpret=interpret)
     return gg[0], gath[0], ti[0], tv[0]

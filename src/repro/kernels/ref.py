@@ -26,6 +26,19 @@ def lbgm_sparse_decision_ref(blocks: jax.Array, idx: jax.Array):
     return gg, gathered, ti.astype(jnp.int32), tv
 
 
+def sort_topk_rows(idx: jax.Array, val: jax.Array):
+    """Canonicalize a block-row top-k (idx, val) pair by ascending index.
+
+    The one-pass kernel emits entries in descending-|value| order
+    (``lax.top_k``), the two-pass threshold-select variant in index
+    order; consumers treat each row as a set, so equivalence tests
+    compare through this canonical form.
+    """
+    order = jnp.argsort(idx, axis=-1)
+    return (jnp.take_along_axis(idx, order, axis=-1),
+            jnp.take_along_axis(val, order, axis=-1))
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=None):
     """Naive softmax attention. q:(BH,Tq,hd), k/v:(BH,Tk,hd)."""
     Tq, Tk = q.shape[1], k.shape[1]

@@ -7,7 +7,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.data.synthetic import mixture_classification
-from repro.fed import FLConfig, FLSystem, partition_iid, partition_label_skew
+from repro.fed import FLConfig, FLEngine, partition_iid, partition_label_skew
 from repro.models.smallnets import apply_fcn, classifier_loss, init_fcn
 
 
@@ -26,7 +26,7 @@ def _make(setup, parts_fn, **flkw):
     K = flkw.pop("num_clients", 10)
     parts = parts_fn(y, K)
     data = [{"x": x[p], "y": y[p]} for p in parts]
-    fl = FLSystem(loss_fn, params, data,
+    fl = FLEngine(loss_fn, params, data,
                   FLConfig(num_clients=K, tau=2, lr=0.05, batch_size=16,
                            **flkw))
     return fl

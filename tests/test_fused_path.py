@@ -366,3 +366,138 @@ def test_prefetcher_next_after_close_raises(fcn_setup):
 def test_lbg_kw_reserved_key_actionable_error(fcn_setup):
     with pytest.raises(ValueError, match="fused_kernels"):
         make_engine(fcn_setup, lbg_kw={"k_frac": 0.1, "fused": True})
+    # the 2-D mesh knobs are engine-controlled too (FLConfig.mesh)
+    with pytest.raises(ValueError, match="FLConfig.mesh"):
+        make_engine(fcn_setup, lbg_variant="topk-sharded",
+                    lbg_kw={"k_frac": 0.1, "n_model": 2})
+    with pytest.raises(ValueError, match="FLConfig.mesh"):
+        make_engine(fcn_setup, lbg_variant="topk-sharded",
+                    lbg_kw={"k_frac": 0.1, "model_axis": "x"})
+
+
+# ---------------------------------- (e) two-pass threshold-select fallback
+
+
+@pytest.mark.parametrize("nb,block,kb", [(1, 700, 33), (3, 512, 17),
+                                         (16, 1000, 9), (4, 256, 256)])
+def test_two_pass_kernel_matches_ref_setwise(key, nb, block, kb):
+    """The Mosaic-safety variant (no in-kernel top_k / take_along_axis)
+    must select the exact same (idx, val) SET per block row as the sorted
+    oracle — slot order is by index, so compare through the canonical
+    form — with the gathered values and ||g||^2 agreeing too."""
+    from repro.kernels.lbgm_sparse import \
+        lbgm_sparse_decision_two_pass_pallas
+    blocks = jax.random.normal(key, (nb, block))
+    perm = jnp.argsort(
+        jax.random.normal(jax.random.fold_in(key, 2), (nb, block)), axis=1)
+    idx = perm[:, :kb].astype(jnp.int32)
+    gg, gath, ti, tv = lbgm_sparse_decision_two_pass_pallas(
+        blocks, idx, interpret=True)
+    rgg, rgath, rti, rtv = ref.lbgm_sparse_decision_ref(blocks, idx)
+    np.testing.assert_allclose(float(gg), float(rgg), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(gath), np.asarray(rgath))
+    si, sv = ref.sort_topk_rows(ti, tv)
+    ri, rv = ref.sort_topk_rows(rti, rtv)
+    np.testing.assert_array_equal(np.asarray(si), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(sv), np.asarray(rv))
+
+
+def test_two_pass_kernel_tiny_magnitudes(key):
+    """Regression: the bit-space bisection must resolve rows whose
+    |values| are far below any absolute float resolution (a float-interval
+    bisection left such rows entirely inside the tie band and selected by
+    index instead of magnitude)."""
+    from repro.kernels.lbgm_sparse import \
+        lbgm_sparse_decision_two_pass_pallas
+    for scale in (1e-20, 1e-35, 1e30):
+        blocks = jax.random.normal(key, (2, 256)) * scale
+        idx = jnp.tile(jnp.arange(4, dtype=jnp.int32)[None], (2, 1))
+        _, gath, ti, tv = lbgm_sparse_decision_two_pass_pallas(
+            blocks, idx, interpret=True)
+        _, rgath, rti, rtv = ref.lbgm_sparse_decision_ref(blocks, idx)
+        np.testing.assert_array_equal(np.asarray(gath), np.asarray(rgath))
+        si, sv = ref.sort_topk_rows(ti, tv)
+        ri, rv = ref.sort_topk_rows(rti, rtv)
+        np.testing.assert_array_equal(np.asarray(si), np.asarray(ri),
+                                      err_msg=f"scale={scale}")
+        np.testing.assert_array_equal(np.asarray(sv), np.asarray(rv))
+
+
+def test_two_pass_kernel_degenerate_rows(key):
+    """All-zero rows and rows with fewer nonzeros than kb: the threshold
+    collapses to 0 and the tie-fill must keep every nonzero plus the
+    lowest-index zeros — exactly lax.top_k's tie rule."""
+    from repro.kernels.lbgm_sparse import \
+        lbgm_sparse_decision_two_pass_pallas
+    z = jnp.zeros((2, 300))
+    z = z.at[1, 250].set(3.0).at[1, 7].set(-2.0)
+    idx = jnp.tile(jnp.arange(5, dtype=jnp.int32)[None], (2, 1))
+    gg, gath, ti, tv = lbgm_sparse_decision_two_pass_pallas(
+        z, idx, interpret=True)
+    want = ref.lbgm_sparse_decision_ref(z, idx)
+    np.testing.assert_array_equal(np.asarray(gath), np.asarray(want[1]))
+    si, sv = ref.sort_topk_rows(ti, tv)
+    ri, rv = ref.sort_topk_rows(want[2], want[3])
+    np.testing.assert_array_equal(np.asarray(si), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(sv), np.asarray(rv))
+    # the nonzeros at positions 7 and 250 both survive the index-order fill
+    assert {7, 250} <= set(np.asarray(ti[1]).tolist())
+
+
+def test_two_pass_vmap_and_env_knob(key, monkeypatch):
+    """vmap routes to the batched two-pass grid; REPRO_LBGM_TWO_PASS_TOPK
+    flips the ops-level default without touching any config."""
+    from repro.kernels.ops import TWO_PASS_ENV, _default_two_pass
+    B, nb, block, kb = 3, 2, 256, 11
+    blocks = jax.random.normal(key, (B, nb, block))
+    idx = jnp.tile(jnp.arange(kb, dtype=jnp.int32)[None, None], (B, nb, 1))
+    got = jax.vmap(lambda x, i: ops.lbgm_sparse_decision(
+        x, i, interpret=True, two_pass=True))(blocks, idx)
+    for b in range(B):
+        want = ref.lbgm_sparse_decision_ref(blocks[b], idx[b])
+        np.testing.assert_allclose(float(got[0][b]), float(want[0]),
+                                   rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(got[1][b]),
+                                      np.asarray(want[1]))
+        si, sv = ref.sort_topk_rows(got[2][b], got[3][b])
+        ri, rv = ref.sort_topk_rows(want[2], want[3])
+        np.testing.assert_array_equal(np.asarray(si), np.asarray(ri))
+        np.testing.assert_array_equal(np.asarray(sv), np.asarray(rv))
+    monkeypatch.delenv(TWO_PASS_ENV, raising=False)
+    assert not _default_two_pass()
+    monkeypatch.setenv(TWO_PASS_ENV, "1")
+    assert _default_two_pass()
+    for off in ("false", "0", "off", "no", "False"):
+        monkeypatch.setenv(TWO_PASS_ENV, off)
+        assert not _default_two_pass(), off
+
+
+def test_two_pass_step_level_agrees(key):
+    """topk_step_core(fused=True) under the two-pass env knob: same
+    accept/recycle decision and fp32-tolerance g_tilde vs the legacy
+    step (bank sets match; element order inside a row may differ)."""
+    import os
+    from repro.kernels.ops import TWO_PASS_ENV
+    k_frac = 0.1
+    g = _rand_grad(key, SHAPES)
+    lbg = lbgm_lib.init_topk_lbg(g, k_frac)
+    _, lbg, _ = lbgm_lib.lbgm_topk_client_step(
+        _rand_grad(jax.random.fold_in(key, 7), SHAPES), lbg, -1.0, k_frac)
+    gt_a, _, st_a = lbgm_lib.lbgm_topk_client_step(g, lbg, 0.5, k_frac)
+    old = os.environ.get(TWO_PASS_ENV)
+    os.environ[TWO_PASS_ENV] = "1"
+    try:
+        gt_b, _, st_b = lbgm_lib.lbgm_topk_client_step(g, lbg, 0.5, k_frac,
+                                                       fused=True)
+    finally:
+        if old is None:
+            os.environ.pop(TWO_PASS_ENV, None)
+        else:
+            os.environ[TWO_PASS_ENV] = old
+    assert bool(st_a.sent_scalar) == bool(st_b.sent_scalar)
+    np.testing.assert_allclose(float(st_a.sin2), float(st_b.sin2),
+                               rtol=1e-4, atol=1e-6)
+    for name in g:
+        np.testing.assert_allclose(np.asarray(gt_a[name]),
+                                   np.asarray(gt_b[name]),
+                                   rtol=1e-5, atol=1e-7)

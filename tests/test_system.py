@@ -82,7 +82,7 @@ def test_fl_plus_pca_pipeline(key):
     from repro.analysis.pca import GradientSpaceTracker
     from repro.configs import get_config
     from repro.data.synthetic import mixture_classification
-    from repro.fed import FLConfig, FLSystem, partition_iid
+    from repro.fed import FLConfig, FLEngine, partition_iid
     from repro.models.smallnets import apply_fcn, classifier_loss, init_fcn
 
     cfg = get_config("paper-fcn")
@@ -91,7 +91,7 @@ def test_fl_plus_pca_pipeline(key):
     parts = partition_iid(len(y), 8, seed=0)
     data = [{"x": x[p], "y": y[p]} for p in parts]
     loss_fn = lambda p, b: classifier_loss(apply_fcn, p, cfg, b["x"], b["y"])
-    fl = FLSystem(loss_fn, params, data,
+    fl = FLEngine(loss_fn, params, data,
                   FLConfig(num_clients=8, tau=2, lr=0.05, batch_size=16))
     tracker = GradientSpaceTracker()
     rng = np.random.RandomState(0)
