@@ -17,7 +17,9 @@ import functools
 import json
 import os
 import subprocess
+import tempfile
 import time
+import warnings
 from typing import Any, Dict, Optional
 
 #: trajectory file every benchmark appends to (one JSON array)
@@ -93,7 +95,17 @@ def bench_path() -> str:
 
 def record_bench(name: str, us_per_round: float,
                  metadata: Optional[Dict[str, Any]] = None) -> None:
-    """Append one entry to the BENCH_engine.json trajectory array."""
+    """Append one entry to the BENCH_engine.json trajectory array.
+
+    The read-modify-write is crash-safe: the new array is written to a
+    sibling temp file and moved into place with ``os.replace`` (atomic on
+    POSIX), so a benchmark killed mid-write — or two processes racing —
+    can no longer leave a truncated file that a later run would silently
+    reset. An existing file that fails to parse is backed up next to the
+    trajectory (``<path>.corrupt-<n>``) instead of being discarded: a
+    perf trajectory spanning many revisions is exactly the artifact you
+    don't want a one-off glitch to zero out.
+    """
     path = bench_path()
     entries = []
     if os.path.exists(path):
@@ -101,9 +113,16 @@ def record_bench(name: str, us_per_round: float,
             with open(path) as f:
                 entries = json.load(f)
             if not isinstance(entries, list):
-                entries = []
-        except (OSError, ValueError):
+                raise ValueError(
+                    f"expected a JSON array, got {type(entries).__name__}")
+        except (OSError, ValueError) as e:
             entries = []
+            backup = _backup_corrupt(path)
+            warnings.warn(
+                f"unreadable bench trajectory {path!r} ({e}); "
+                + (f"backed up to {backup!r} and " if backup else "")
+                + "starting a fresh trajectory",
+                RuntimeWarning, stacklevel=2)
     entries.append({
         "name": name,
         "us_per_round": float(us_per_round),
@@ -111,9 +130,34 @@ def record_bench(name: str, us_per_round: float,
         "git_rev": _git_rev(),
         "timestamp": time.time(),
     })
-    with open(path, "w") as f:
-        json.dump(entries, f, indent=1)
-        f.write("\n")
+    directory = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=directory, prefix=".bench-", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(entries, f, indent=1)
+            f.write("\n")
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def _backup_corrupt(path: str) -> Optional[str]:
+    """Move an unparsable trajectory aside; returns the backup path
+    (numbered so repeated failures don't clobber each other), or None if
+    even the rename failed."""
+    for n in range(1000):
+        backup = f"{path}.corrupt-{n}"
+        if not os.path.exists(backup):
+            try:
+                os.replace(path, backup)
+                return backup
+            except OSError:
+                return None
+    return None
 
 
 def emit(name: str, us_per_call: float, derived: str,

@@ -1,0 +1,151 @@
+"""Byzantine-robustness benchmark: accuracy vs attack fraction.
+
+The question this grid answers is the one ``repro.fed.robust`` exists
+for: does LBGM's scalar-round compression change how much damage a
+Byzantine cohort does, and does a robust server rule recover it? Each
+row is final held-out accuracy (NOT a time — the ``us_per_round`` field
+carries the accuracy, flagged in ``derived``) for one cell of
+
+    {dense FedAvg, LBGM scalar rounds} x {mean, geometric_median}
+        x {clean, sign_flip, gaussian} x attack fraction
+
+written to BENCH_engine.json so robustness trajectories across revisions
+are diffable the same way the perf rows are.
+
+Regimes:
+
+* ``dense``  — ``use_lbgm=False``: plain FedAvg, every client uploads a
+  dense update; robust rules see the raw per-client vectors.
+* ``scalar`` — LBGM with the top-k store and ``delta_threshold=0.9``:
+  after the round-0 refresh ~90% of rounds recycle, so the server
+  aggregates the sparse (idx, val) scalar-round payloads (each row
+  records the measured ``frac_scalar``). Attacks corrupt the client
+  payload BEFORE the LBG pipeline (see ``fed/attacks``), so a flipped
+  update also poisons the attacker's rho on recycle rounds — the regime
+  the paper never studies.
+
+The headline cell (the PR's acceptance gate): at a 20% sign-flip cohort
+(``scale=4`` — flip and amplify, the standard reverse-gradient attack),
+plain-mean accuracy collapses in BOTH regimes while the geometric median
+stays within ``GM_TOL`` of the clean run; the per-regime ``headline``
+summary row asserts exactly that and records both gaps.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from benchmarks.common import build_spec, record_bench, spec_metadata
+
+#: acceptance tolerance: geometric median must stay within this much of
+#: the clean-run accuracy at the headline 20% sign-flip cell
+GM_TOL = 0.05
+#: and plain mean must lose at least this much accuracy vs clean there
+MEAN_MIN_DROP = 0.20
+
+#: the attack grid: (attack registry key, attack_kw)
+ATTACKS = (("sign_flip", {"scale": 4.0}), ("gaussian", {"sigma": 2.0}))
+
+
+def _cell(regime: str, agg: str, rounds: int, num_clients: int,
+          n_data: int, attack: Optional[str] = None,
+          attack_frac: float = 0.0, attack_kw: Optional[dict] = None,
+          delta: float = 0.9) -> dict:
+    """Run one grid cell; returns {test_acc, frac_scalar, spec}."""
+    import numpy as np
+
+    from repro.fed import run_experiment
+
+    flkw = dict(aggregator=agg, attack=attack, attack_frac=attack_frac,
+                attack_kw=attack_kw, sample_frac=1.0)
+    if regime == "scalar":
+        flkw.update(use_lbgm=True, lbg_variant="topk",
+                    lbg_kw={"k_frac": 0.1}, delta_threshold=delta)
+    else:
+        flkw.update(use_lbgm=False)
+    tag = "clean" if attack is None else f"{attack}-f{attack_frac}"
+    spec = build_spec(num_clients=num_clients, n_data=n_data,
+                      n_eval=max(200, n_data // 4),
+                      name=f"robust-{regime}-{agg}-{tag}", **flkw)
+    result = run_experiment(spec, rounds)
+    return {
+        "test_acc": float(result.final_eval["test_acc"]),
+        "frac_scalar": float(np.mean([r.frac_scalar
+                                      for r in result.records])),
+        "spec": spec,
+    }
+
+
+def _emit_acc(name: str, cell: dict, clean_acc: float, **meta) -> None:
+    """Accuracy row: CSV + BENCH_engine.json, value flagged as accuracy."""
+    acc = cell["test_acc"]
+    derived = (f"test_acc={acc:.3f} acc_drop_vs_clean="
+               f"{clean_acc - acc:+.3f} frac_scalar="
+               f"{cell['frac_scalar']:.2f} (row value is accuracy, "
+               "not a time)")
+    print(f"{name},{acc:.3f},{derived}")
+    record_bench(name, acc, {
+        "derived": derived, "test_acc": acc, "clean_acc": clean_acc,
+        "acc_drop_vs_clean": clean_acc - acc,
+        "frac_scalar": cell["frac_scalar"], **meta,
+        **spec_metadata(cell["spec"]),
+    })
+
+
+def run(rounds: int = 25, num_clients: int = 20, n_data: int = 2000,
+        fracs=(0.2, 0.4), attacks=ATTACKS, headline_frac: float = 0.2,
+        delta: float = 0.9) -> None:
+    for regime in ("dense", "scalar"):
+        clean, attacked = {}, {}
+        for agg in ("mean", "geometric_median"):
+            kw = dict(rounds=rounds, num_clients=num_clients,
+                      n_data=n_data, delta=delta)
+            clean[agg] = _cell(regime, agg, **kw)
+            _emit_acc(f"robustness/{regime}/{agg}/clean", clean[agg],
+                      clean[agg]["test_acc"], regime=regime,
+                      aggregator=agg, attack=None, attack_frac=0.0)
+            for attack, attack_kw in attacks:
+                for frac in fracs:
+                    cell = _cell(regime, agg, attack=attack,
+                                 attack_frac=frac, attack_kw=attack_kw,
+                                 **kw)
+                    attacked[(agg, attack, frac)] = cell
+                    _emit_acc(
+                        f"robustness/{regime}/{agg}/{attack}/frac{frac}",
+                        cell, clean[agg]["test_acc"], regime=regime,
+                        aggregator=agg, attack=attack, attack_frac=frac,
+                        attack_kw=dict(attack_kw))
+        _headline(regime, clean, attacked, headline_frac)
+
+
+def _headline(regime: str, clean: dict, attacked: dict,
+              frac: float) -> None:
+    """The acceptance summary row for one regime: at a >=20% sign-flip
+    cohort, gm holds within GM_TOL of clean while mean drops >=
+    MEAN_MIN_DROP. Skipped (with a note) if the grid didn't include the
+    headline cell."""
+    key_m, key_g = ("mean", "sign_flip", frac), \
+        ("geometric_median", "sign_flip", frac)
+    if key_m not in attacked or key_g not in attacked:
+        print(f"robustness/{regime}/headline,nan,skipped "
+              f"(sign_flip frac={frac} not in grid)")
+        return
+    mean_drop = clean["mean"]["test_acc"] - attacked[key_m]["test_acc"]
+    gm_gap = (clean["geometric_median"]["test_acc"]
+              - attacked[key_g]["test_acc"])
+    ok = gm_gap <= GM_TOL and mean_drop >= MEAN_MIN_DROP
+    derived = (f"sign_flip frac={frac}: mean_drop={mean_drop:.3f} "
+               f"(>= {MEAN_MIN_DROP}), gm_gap={gm_gap:.3f} "
+               f"(<= {GM_TOL}) -> {'PASS' if ok else 'FAIL'} "
+               "(row value is the mean's accuracy drop, not a time)")
+    name = f"robustness/{regime}/headline"
+    print(f"{name},{mean_drop:.3f},{derived}")
+    record_bench(name, mean_drop, {
+        "derived": derived, "regime": regime, "attack": "sign_flip",
+        "attack_frac": frac, "mean_drop": mean_drop, "gm_gap": gm_gap,
+        "gm_tol": GM_TOL, "mean_min_drop": MEAN_MIN_DROP, "pass": ok,
+    })
+
+
+if __name__ == "__main__":
+    import benchmarks  # noqa: F401  (src/ path bootstrap)
+    run()

@@ -15,7 +15,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig5,fig6,fig7,fig8,kernels,"
-                         "cohort")
+                         "cohort,robustness")
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--toy", action="store_true",
                     help="tiny problem sizes (CI smoke): small kernel "
@@ -59,6 +59,15 @@ def main() -> None:
                                mesh_cohorts=(8,))
         else:
             cohort_scaling.run(rounds=min(args.rounds, 5))
+    if on("robustness"):
+        from benchmarks import robustness
+        if args.toy:
+            robustness.run(rounds=3, num_clients=8, n_data=320,
+                           fracs=(0.25,),
+                           attacks=(("sign_flip", {"scale": 4.0}),),
+                           headline_frac=0.25)
+        else:
+            robustness.run(rounds=args.rounds)
 
 
 if __name__ == '__main__':

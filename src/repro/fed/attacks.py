@@ -1,0 +1,204 @@
+"""Byzantine client attacks + fault injection (ROADMAP open item 3).
+
+The client half of the robustness experiment ``repro.fed.robust``
+aggregates against: registry-pluggable *attack components* that corrupt a
+configured fraction of clients, plus straggler/dropout fault injection on
+the engine's existing participation-mask path.
+
+Threat model: a Byzantine client controls its own message to the server
+but still speaks the protocol. Payload attacks therefore corrupt the
+accumulated stochastic gradient *before* the uplink pipeline and the LBGM
+decision — the malicious client's look-back bank, accept/recycle choice
+and (idx, val) payload are all computed from the corrupted update, exactly
+as a real adversary inside the client would produce them. That is what
+makes the LBGM-vs-FedAvg question real: on a recycle round the attacker's
+entire influence is one scalar rho against its (also corrupted) bank.
+
+Two component levels:
+
+* ``level = "data"`` — host-side corruption of the Byzantine clients'
+  training data, applied once at engine construction (``corrupt(data)``).
+  Built-in: ``"label_flip"`` (y -> num_classes - 1 - y).
+* ``level = "payload"`` — traced corruption of the per-client accumulated
+  gradient inside the jit'd round (``apply(asg, byz, extras)``; ``byz``
+  is the client's 0/1 Byzantine flag, threaded through the batch dict so
+  it rides the schedulers' existing vmap/chunk/shard_map layouts and the
+  RoundPrefetcher unchanged). Built-ins: ``"sign_flip"`` (g -> -g),
+  ``"scaled"`` (g -> scale*g model replacement), ``"free_rider"``
+  (g -> 0), ``"gaussian"`` (g -> sigma*N(0, I), per-round noise from the
+  component's ``round_extras`` seeds).
+
+Determinism: the Byzantine cohort is a fixed ``round(attack_frac * K)``
+subset drawn once from a dedicated ``np.random.RandomState`` stream, and
+per-round attack randomness (plus ``FLConfig.dropout_frac`` straggler
+faults) consumes a separate *fault stream* — the engine's main rng stream
+is untouched, so a clean run (``attack=None``, ``dropout_frac=0``) is
+bit-for-bit identical to pre-attack round histories and an attacked run
+replays exactly under the same seed.
+
+Config surface: ``FLConfig.attack`` / ``attack_frac`` / ``attack_kw`` /
+``dropout_frac`` (validated at construction, JSON round-trips through
+``ExperimentSpec`` and the CLI). Extend with ``@register_attack``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.fed.registry import ATTACKS, register_attack
+
+#: reserved batch keys the engine strips before the local-SGD scan
+BYZ_KEY = "_byz"
+SEED_KEY = "_atk_seed"
+
+
+def select_byzantine(num_clients: int, attack_frac: float,
+                     seed: int) -> np.ndarray:
+    """The fixed Byzantine cohort: a (K,) 0/1 float mask.
+
+    ``round(attack_frac * K)`` distinct clients drawn from a dedicated
+    stream (never the engine's batch/mask rng), so the cohort is stable
+    across rounds and reproducible under the same seed.
+    """
+    mask = np.zeros(num_clients, np.float32)
+    n_byz = int(round(attack_frac * num_clients))
+    if n_byz:
+        rng = np.random.RandomState(seed * 2654435761 % (2 ** 31) + 17)
+        mask[rng.choice(num_clients, size=n_byz, replace=False)] = 1.0
+    return mask
+
+
+def fault_rng(seed: int) -> np.random.RandomState:
+    """The fault stream: per-round attack noise + dropout draws.
+
+    Separate from the engine rng by construction, so enabling attacks or
+    dropout never shifts the batch/participation draw stream.
+    """
+    return np.random.RandomState((seed + 0x5EED) * 48271 % (2 ** 31))
+
+
+class PayloadAttack:
+    """Base: corrupt the accumulated gradient of Byzantine clients.
+
+    ``apply`` runs per client under the schedulers' vmap (``byz`` is a
+    scalar 0/1; ``extras`` per-client scalars from :meth:`round_extras`).
+    Subclasses implement ``_corrupt(asg, extras) -> asg`` and the base
+    gates it on the flag, so honest clients' updates are bit-untouched.
+    """
+
+    level = "payload"
+
+    def round_extras(self, rng: np.random.RandomState,
+                     num_clients: int) -> dict:
+        """Per-round (K,) host arrays to thread through the batch dict."""
+        return {}
+
+    def apply(self, asg, byz, extras):
+        import jax
+        import jax.numpy as jnp
+        if byz is None:
+            return asg
+        bad = self._corrupt(asg, extras)
+        return jax.tree.map(lambda h, a: jnp.where(byz > 0, a, h), asg, bad)
+
+    def _corrupt(self, asg, extras):
+        raise NotImplementedError
+
+
+@register_attack("sign_flip")
+class SignFlip(PayloadAttack):
+    """g -> -scale*g: the classic direction-reversal poisoning."""
+
+    def __init__(self, scale: float = 1.0):
+        self.scale = float(scale)
+
+    def _corrupt(self, asg, extras):
+        import jax
+        return jax.tree.map(lambda x: -self.scale * x, asg)
+
+
+@register_attack("scaled")
+class Scaled(PayloadAttack):
+    """g -> scale*g: model replacement — the attacker boosts its update
+    to dominate the average (scale ~ K defeats a plain mean)."""
+
+    def __init__(self, scale: float = 10.0):
+        self.scale = float(scale)
+
+    def _corrupt(self, asg, extras):
+        import jax
+        return jax.tree.map(lambda x: self.scale * x, asg)
+
+
+@register_attack("free_rider")
+class FreeRider(PayloadAttack):
+    """g -> 0: contributes nothing while still being averaged in (cf. the
+    blades FedModel free-rider client)."""
+
+    def _corrupt(self, asg, extras):
+        import jax
+        import jax.numpy as jnp
+        return jax.tree.map(jnp.zeros_like, asg)
+
+
+@register_attack("gaussian")
+class Gaussian(PayloadAttack):
+    """g -> sigma * N(0, I): pure-noise updates, fresh each round.
+
+    Noise keys ride the batch dict as per-client uint32 seeds drawn from
+    the fault stream (``round_extras``), so the attack replays exactly
+    under a fixed seed and the prefetch thread stays the only consumer of
+    host randomness.
+    """
+
+    def __init__(self, sigma: float = 1.0):
+        self.sigma = float(sigma)
+
+    def round_extras(self, rng, num_clients):
+        return {SEED_KEY: rng.randint(
+            0, 2 ** 31 - 1, size=num_clients).astype(np.uint32)}
+
+    def _corrupt(self, asg, extras):
+        import jax
+        import jax.numpy as jnp
+        key = jax.random.PRNGKey(extras[SEED_KEY])
+        out = {}
+        for i, (name, x) in enumerate(asg.items()):
+            leaf_key = jax.random.fold_in(key, i)
+            out[name] = (self.sigma
+                         * jax.random.normal(leaf_key, x.shape, jnp.float32)
+                         ).astype(x.dtype)
+        return out
+
+
+@register_attack("label_flip")
+class LabelFlip:
+    """Data-level poisoning: y -> num_classes - 1 - y on the Byzantine
+    clients' local shards, applied once at engine construction."""
+
+    level = "data"
+
+    def __init__(self, num_classes: int = 10):
+        self.num_classes = int(num_classes)
+
+    def corrupt(self, data: dict) -> dict:
+        if "y" not in data:
+            raise ValueError(
+                "label_flip attack needs integer labels under data key "
+                f"'y'; client data has keys {sorted(data)} — use a "
+                "payload-level attack (sign_flip/scaled/gaussian/"
+                "free_rider) for unlabeled tasks")
+        return {**data, "y": (self.num_classes - 1 - data["y"]).astype(
+            data["y"].dtype)}
+
+
+def make_attack(cfg):
+    """Resolve ``cfg.attack`` through the registry (None -> no attack),
+    with an actionable error when ``attack_kw`` doesn't match."""
+    if cfg.attack is None:
+        return None
+    try:
+        return ATTACKS.get(cfg.attack)(**(cfg.attack_kw or {}))
+    except TypeError as e:
+        raise ValueError(
+            f"FLConfig.attack_kw {cfg.attack_kw!r} does not match attack "
+            f"{cfg.attack!r}: {e}") from e

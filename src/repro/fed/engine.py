@@ -48,6 +48,30 @@ declarative ``ExperimentSpec`` API builds on):
    is the aggregator below); an optional ``layout_banks(bank)`` hook lets
    it own the state banks' physical layout.
 
+   ``FLConfig.aggregator`` selects the *server rule* the aggregator
+   implements. ``"mean"`` (default) is the streaming fold above —
+   bit-for-bit the pre-robustness histories. Any robust rule from
+   ``repro.fed.robust`` (``trimmed_mean`` / ``coordinate_median`` /
+   ``geometric_median``, extendable via ``@register_aggregator``)
+   switches every scheduler into **collect mode**: the per-client
+   payloads (dense g_tilde, or the sparse (idx, val) + gscale
+   scalar-round payload, densified server-side) ride the scan outputs
+   into a (K, ...) stack and the rule reduces them in one weighted
+   cross-client estimate — O(K·M) peak, the honest price of a median.
+
+   Client faults come from ``repro.fed.attacks``: ``FLConfig.attack`` /
+   ``attack_frac`` / ``attack_kw`` flag a fixed seed-derived Byzantine
+   cohort whose payloads are corrupted inside ``client_fn`` *before* the
+   uplink pipeline and LBG store step (so a recycle round's rho is
+   poisoned too); ``label_flip`` corrupts the cohort's data at engine
+   build instead. ``dropout_frac`` injects straggler dropout through the
+   participation-mask path. Byzantine flags and per-round attack seeds
+   ride the batch dict under reserved ``"_byz"``/``"_atk_*"`` keys (so
+   they inherit every scheduler's batch layout and the prefetcher's H2D
+   overlap); all fault randomness draws from a dedicated stream, so
+   clean runs are bit-for-bit unchanged and attacked runs replay
+   deterministically under the same seed.
+
    The aggregator is how the per-round hot path does work proportional to
    what the round transmits (``FLConfig.fused_kernels``):
 
@@ -110,6 +134,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import warnings
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -125,9 +150,13 @@ from repro.core.lbgm_sharded import (_SM_KW, _shard_map,
                                      make_local_topk_step,
                                      make_mesh_topk_step)
 from repro.core.tree_math import tree_size, tree_zeros_like
+from repro.fed.attacks import (BYZ_KEY, fault_rng, make_attack,
+                               select_byzantine)
 from repro.fed.flconfig import FLConfig  # noqa: F401  (re-export)
 from repro.fed.registry import (LBG_STORES, SCHEDULERS, register_lbg_store,
                                 register_scheduler)
+from repro.fed.robust import (CollectDenseAggregator,
+                              CollectSparseAggregator, make_robust_rule)
 
 
 def resolve_fused_kernels(cfg: FLConfig) -> bool:
@@ -407,13 +436,29 @@ class SparseTopKAggregator:
 def make_aggregator(cfg: FLConfig, store, params):
     """Resolve the round aggregation strategy for ``(cfg, store)``.
 
-    Sparse scalar-round aggregation is on whenever the store supports it
-    and ``fused_kernels`` is not explicitly ``False`` (it is pure XLA, so
-    unlike the Pallas kernels it pays off on every backend).
+    Two orthogonal choices meet here. The *payload* (sparse vs dense):
+    sparse scalar-round payloads whenever the store supports them and
+    ``fused_kernels`` is not explicitly ``False`` (pure XLA, so unlike the
+    Pallas kernels it pays off on every backend). The *rule*
+    (``cfg.aggregator``, resolved through the AGGREGATORS registry):
+    ``"mean"`` keeps the streaming fold above — the exact legacy code
+    path, bit-for-bit with pre-robustness histories — while every robust
+    rule (trimmed_mean / coordinate_median / geometric_median / ...)
+    switches the schedulers into *collect* mode: a median cannot be
+    folded one client at a time, so the per-client payload stacks (dense
+    g_tilde or sparse (idx, val) + gscale) are collected across chunks
+    and reduced once per round (see ``repro.fed.robust``).
     """
-    if cfg.fused_kernels is not False and hasattr(store, "make_aggregator"):
-        return store.make_aggregator(params), True
-    return DenseAggregator(), False
+    rule = make_robust_rule(cfg)
+    sparse = (cfg.fused_kernels is not False
+              and hasattr(store, "make_aggregator"))
+    if getattr(rule, "streaming", False):
+        if sparse:
+            return store.make_aggregator(params), True
+        return DenseAggregator(), False
+    if sparse:
+        return CollectSparseAggregator(rule, params, store.k_frac), True
+    return CollectDenseAggregator(rule), False
 
 
 # ------------------------------------------------------------- schedulers
@@ -470,8 +515,13 @@ class VmapScheduler:
     def run(self, client_fn, agg, params, batch, lbg, resid, w, maskf):
         gt, new_lbg, new_res, loss, uplink, scalar = jax.vmap(
             lambda b, l, r: client_fn(params, b, l, r))(batch, lbg, resid)
-        acc = agg.accumulate(agg.init(params), w, gt)
-        return (agg.finalize(acc), _keep_sampled(maskf, new_lbg, lbg),
+        if getattr(agg, "collect", False):
+            # robust rules need the whole per-client stack at once — vmap
+            # already has it in hand
+            out = agg.reduce(w, gt)
+        else:
+            out = agg.finalize(agg.accumulate(agg.init(params), w, gt))
+        return (out, _keep_sampled(maskf, new_lbg, lbg),
                 _keep_sampled(maskf, new_res, resid), loss, uplink, scalar)
 
 
@@ -519,23 +569,39 @@ class ChunkedScheduler:
             lambda x, v: jax.lax.dynamic_update_slice_in_dim(
                 x, v, i * chunk, axis=0), t, u)
 
+        collect = getattr(agg, "collect", False)
+
         def chunk_body(carry, xs):
             acc, lbg_bank, res_bank = carry
             i, b_c, w_c, m_c = xs
             l_c, r_c = slice_at(lbg_bank, i), slice_at(res_bank, i)
             gt, nl, nr, loss, uplink, scalar = jax.vmap(
                 lambda b, l, r: client_fn(params, b, l, r))(b_c, l_c, r_c)
-            acc = agg.accumulate(acc, w_c, gt)
+            if collect:
+                # a robust rule cannot fold a median chunk-by-chunk: stack
+                # the raw per-client payloads as scan outputs instead
+                # (O(Kp·payload) — the documented collect-mode memory)
+                ys = (loss, uplink, scalar, gt)
+            else:
+                acc = agg.accumulate(acc, w_c, gt)
+                ys = (loss, uplink, scalar)
             lbg_bank = update_at(lbg_bank, _keep_sampled(m_c, nl, l_c), i)
             res_bank = update_at(res_bank, _keep_sampled(m_c, nr, r_c), i)
-            return (acc, lbg_bank, res_bank), (loss, uplink, scalar)
+            return (acc, lbg_bank, res_bank), ys
 
-        init = (agg.init(params), lbg, resid)
-        (acc, new_lbg, new_res), (loss, uplink, scalar) = jax.lax.scan(
+        init = (jnp.zeros(()) if collect else agg.init(params), lbg, resid)
+        (acc, new_lbg, new_res), ys = jax.lax.scan(
             chunk_body, init,
             (jnp.arange(n_chunks), batch, w.reshape(n_chunks, chunk),
              maskf.reshape(n_chunks, chunk)))
-        return (agg.finalize(acc), new_lbg, new_res, loss.reshape(Kp)[:K],
+        if collect:
+            loss, uplink, scalar, gt = ys
+            out = agg.reduce(w, jax.tree.map(
+                lambda x: x.reshape((-1,) + x.shape[2:]), gt))
+        else:
+            loss, uplink, scalar = ys
+            out = agg.finalize(acc)
+        return (out, new_lbg, new_res, loss.reshape(Kp)[:K],
                 uplink.reshape(Kp)[:K], scalar.reshape(Kp)[:K])
 
 
@@ -676,26 +742,47 @@ class ShardedScheduler(ChunkedScheduler):
         acc_specs = {name: P(self.MODEL_AXIS) if on else rep
                      for name, on in ms.items()} if ms else rep
 
-        def local_chunk(acc, p, b, l, r, w_c, m_c):
-            gt, nl, nr, loss, uplink, scalar = jax.vmap(
-                lambda bb, ll, rr: client_fn(p, bb, ll, rr))(b, l, r)
-            # client-device 0 seeds its local accumulation with the scan
-            # carry, so each chunk folds into the aggregate in the same
-            # strictly sequential order as ChunkedScheduler; the psum is
-            # the identity on a 1-device client axis (the carry — dense
-            # params-shaped or sparse block-layout, per the aggregator —
-            # is replicated along `clients`; model-sharded carry leaves
-            # hold disjoint rows per model rank, never summed over model)
-            first = jax.lax.axis_index(ax) == 0
-            acc = jax.tree.map(lambda a: jnp.where(first, a, 0.0), acc)
-            acc = jax.lax.psum(agg.accumulate(acc, w_c, gt), ax)
-            return (acc, _keep_sampled(m_c, nl, l),
-                    _keep_sampled(m_c, nr, r), loss, uplink, scalar)
+        collect = getattr(agg, "collect", False)
+        if collect:
+            # robust collect mode: no carry to fold — each device emits its
+            # local clients' raw payloads, stitched to the global (chunk,
+            # ...) stack by the out specs (sparse (idx, val) payloads keep
+            # the bank's client/model placement; the weighted reduce runs
+            # once per round on the global stack, outside shard_map)
+            def local_chunk(p, b, l, r, w_c, m_c):
+                gt, nl, nr, loss, uplink, scalar = jax.vmap(
+                    lambda bb, ll, rr: client_fn(p, bb, ll, rr))(b, l, r)
+                return (gt, _keep_sampled(m_c, nl, l),
+                        _keep_sampled(m_c, nr, r), loss, uplink, scalar)
 
-        sharded_chunk = _shard_map(
-            local_chunk, mesh=self.mesh,
-            in_specs=(acc_specs, rep, cl, lbg_specs, cl, cl, cl),
-            out_specs=(acc_specs, lbg_specs, cl, cl, cl, cl), **_SM_KW)
+            gt_specs = (lbg_specs, cl) if getattr(agg, "sparse", False) \
+                else cl
+            sharded_chunk = _shard_map(
+                local_chunk, mesh=self.mesh,
+                in_specs=(rep, cl, lbg_specs, cl, cl, cl),
+                out_specs=(gt_specs, lbg_specs, cl, cl, cl, cl), **_SM_KW)
+        else:
+            def local_chunk(acc, p, b, l, r, w_c, m_c):
+                gt, nl, nr, loss, uplink, scalar = jax.vmap(
+                    lambda bb, ll, rr: client_fn(p, bb, ll, rr))(b, l, r)
+                # client-device 0 seeds its local accumulation with the
+                # scan carry, so each chunk folds into the aggregate in the
+                # same strictly sequential order as ChunkedScheduler; the
+                # psum is the identity on a 1-device client axis (the carry
+                # — dense params-shaped or sparse block-layout, per the
+                # aggregator — is replicated along `clients`; model-sharded
+                # carry leaves hold disjoint rows per model rank, never
+                # summed over model)
+                first = jax.lax.axis_index(ax) == 0
+                acc = jax.tree.map(lambda a: jnp.where(first, a, 0.0), acc)
+                acc = jax.lax.psum(agg.accumulate(acc, w_c, gt), ax)
+                return (acc, _keep_sampled(m_c, nl, l),
+                        _keep_sampled(m_c, nr, r), loss, uplink, scalar)
+
+            sharded_chunk = _shard_map(
+                local_chunk, mesh=self.mesh,
+                in_specs=(acc_specs, rep, cl, lbg_specs, cl, cl, cl),
+                out_specs=(acc_specs, lbg_specs, cl, cl, cl, cl), **_SM_KW)
 
         idx_at = lambda t, i: jax.tree.map(
             lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False),
@@ -708,17 +795,30 @@ class ShardedScheduler(ChunkedScheduler):
             acc, lbg_bank, res_bank = carry
             i, b_c, w_c, m_c = xs
             l_c, r_c = idx_at(lbg_bank, i), idx_at(res_bank, i)
-            acc, nl, nr, loss, uplink, scalar = sharded_chunk(
-                acc, params, b_c, l_c, r_c, w_c, m_c)
+            if collect:
+                gt, nl, nr, loss, uplink, scalar = sharded_chunk(
+                    params, b_c, l_c, r_c, w_c, m_c)
+                ys = (loss, uplink, scalar, gt)
+            else:
+                acc, nl, nr, loss, uplink, scalar = sharded_chunk(
+                    acc, params, b_c, l_c, r_c, w_c, m_c)
+                ys = (loss, uplink, scalar)
             return ((acc, put_at(lbg_bank, nl, i), put_at(res_bank, nr, i)),
-                    (loss, uplink, scalar))
+                    ys)
 
-        init = (agg.init(params), lbg, resid)
-        (acc, new_lbg, new_res), (loss, uplink, scalar) = jax.lax.scan(
+        init = (jnp.zeros(()) if collect else agg.init(params), lbg, resid)
+        (acc, new_lbg, new_res), ys = jax.lax.scan(
             chunk_body, init,
             (jnp.arange(n_chunks), batch, w.reshape(n_chunks, chunk),
              maskf.reshape(n_chunks, chunk)))
-        return (agg.finalize(acc), new_lbg, new_res, loss.reshape(Kp)[:K],
+        if collect:
+            loss, uplink, scalar, gt = ys
+            out = agg.reduce(w, jax.tree.map(
+                lambda x: x.reshape((-1,) + x.shape[2:]), gt))
+        else:
+            loss, uplink, scalar = ys
+            out = agg.finalize(acc)
+        return (out, new_lbg, new_res, loss.reshape(Kp)[:K],
                 uplink.reshape(Kp)[:K], scalar.reshape(Kp)[:K])
 
 
@@ -749,6 +849,25 @@ class FLEngine:
                 "every client needs >= 1 (a label-skew partition starves "
                 "clients when class demand exceeds supply — use more data, "
                 "fewer clients, or more classes_per_client)")
+        # Byzantine attack + fault injection (repro.fed.attacks): the
+        # Byzantine cohort is one fixed round(attack_frac*K) subset for the
+        # whole run; data-level attacks corrupt the malicious clients'
+        # local shards HERE, before the engine concatenates its one copy
+        # of the dataset. Per-round attack noise and dropout_frac
+        # straggler faults consume the dedicated fault stream, never the
+        # batch/mask rng — a clean run is bit-for-bit unchanged.
+        self.attack = make_attack(flcfg)
+        self._byz = select_byzantine(K, flcfg.attack_frac, flcfg.seed)
+        self._payload_attack = None
+        if self.attack is not None:
+            if self.attack.level == "data":
+                client_data = [
+                    self.attack.corrupt(d) if self._byz[k] > 0 else d
+                    for k, d in enumerate(client_data)]
+                self.client_data = client_data
+            else:
+                self._payload_attack = self.attack
+        self._fault_rng = fault_rng(flcfg.seed)
         # the scheduler owns the scan-block layout (its run/prepare_batch
         # consume it); _chunk/_pad stay mirrored here as the engine's
         # introspection surface — bank padding below and the tier-1 layout
@@ -825,9 +944,24 @@ class FLEngine:
             return asg, jnp.mean(ls)
 
         sparse = self._sparse_agg
+        attack = self._payload_attack
 
         def client_fn(params, batches, lbg_k, resid_k):
+            # engine-reserved batch keys (Byzantine flag + per-round attack
+            # extras) ride the batch dict through every scheduler layout
+            # and the prefetcher; strip them before the local-SGD scan
+            batches = dict(batches)
+            byz = batches.pop(BYZ_KEY, None)
+            extras = {k: batches.pop(k) for k in list(batches)
+                      if k.startswith("_atk_")}
             asg, loss = client_update(params, batches)
+            if attack is not None:
+                # the Byzantine client corrupts its accumulated gradient
+                # BEFORE the uplink pipeline and the LBGM decision: its
+                # bank, accept/recycle choice and payload all follow from
+                # the corrupted update, exactly as a protocol-following
+                # adversary would produce them
+                asg = attack.apply(asg, byz, extras)
             asg, resid_k, cost = pipeline(asg, resid_k)
             # sparse aggregation: gt is the ((idx, val) payload, gscale)
             # pair the SparseTopKAggregator scatter-adds — the dense
@@ -892,6 +1026,14 @@ class FLEngine:
             idx[k] = rng.randint(0, n, size=(cfg.tau, cfg.batch_size))
         idx += self._data_offsets[:, None, None]
         stacked = {k: v[idx] for k, v in self._data_cat.items()}
+        if self._payload_attack is not None:
+            # per-client Byzantine flags (+ any per-round attack extras,
+            # drawn from the fault stream — never from ``rng``) ride the
+            # batch dict so they inherit the scheduler layout, the H2D
+            # staging and the prefetch overlap for free
+            stacked[BYZ_KEY] = self._byz
+            stacked.update(self._payload_attack.round_extras(
+                self._fault_rng, cfg.num_clients))
         stacked = self.sched.prepare_batch(stacked)
         return {k: jnp.asarray(v) for k, v in stacked.items()}
 
@@ -907,11 +1049,29 @@ class FLEngine:
         """
         cfg = self.cfg
         if cfg.sample_frac >= 1.0:
-            return np.ones(cfg.num_clients)
-        u = rng.rand(cfg.num_clients)
-        mask = (u < cfg.sample_frac).astype(np.float64)
-        if mask.sum() == 0:
-            mask[int(np.argmin(u))] = 1.0
+            mask = np.ones(cfg.num_clients)
+        else:
+            u = rng.rand(cfg.num_clients)
+            mask = (u < cfg.sample_frac).astype(np.float64)
+            if mask.sum() == 0:
+                mask[int(np.argmin(u))] = 1.0
+        if cfg.dropout_frac > 0.0:
+            # straggler/dropout fault injection rides the participation
+            # mask: each sampled client independently fails to report with
+            # prob dropout_frac. Draws come from the fault stream (exactly
+            # num_clients uniforms per round, sampled or not), so the
+            # Algorithm-3 rng stream above is untouched and the fault
+            # pattern replays under the same seed.
+            d = self._fault_rng.rand(cfg.num_clients)
+            dropped = mask * (d >= cfg.dropout_frac)
+            if dropped.sum() == 0:
+                # an all-straggler round still needs one reporter: revive
+                # the sampled client least likely to have dropped (no
+                # extra draws — stream invariance, as in the empty-cohort
+                # fallback above)
+                dropped = np.zeros_like(mask)
+                dropped[int(np.argmax(np.where(mask > 0, d, -1.0)))] = 1.0
+            mask = dropped
         return mask
 
     # -------------------------------------------------------------- run
@@ -1011,8 +1171,13 @@ class RoundPrefetcher:
     def _produce(self):
         try:
             while not self._stop.is_set():
-                item = (self._engine._sample_batches(self._rng),
-                        self._engine._sample_mask(self._rng))
+                batch = self._engine._sample_batches(self._rng)
+                # re-check between the two rng draws: a close() racing this
+                # loop must not trigger another _sample_mask -> H2D staging
+                # round against an engine that is already tearing down
+                if self._stop.is_set():
+                    break
+                item = (batch, self._engine._sample_mask(self._rng))
                 while not self._stop.is_set():
                     try:
                         self._q.put(item, timeout=0.05)
@@ -1034,17 +1199,27 @@ class RoundPrefetcher:
         Once the producer has failed, every subsequent call re-raises
         immediately (the sentinel is posted once; without the dead flag a
         retry would block forever on the empty queue), and calling after
-        ``close()`` errors instead of deadlocking on the dead producer."""
-        if self._err is not None and self._q.empty():
-            raise RuntimeError(
-                "round prefetch thread failed") from self._err
-        if self._stop.is_set() and self._q.empty():
-            raise RuntimeError("RoundPrefetcher used after close()")
-        item = self._q.get()
-        if item is self._SENTINEL:
-            raise RuntimeError(
-                "round prefetch thread failed") from self._err
-        return item
+        ``close()`` errors instead of deadlocking on the dead producer.
+
+        The wait itself is a timeout-loop ``get`` that re-checks
+        ``_stop``/``_err`` every lap: the one-shot pre-checks above are not
+        atomic with a blocking ``get()``, so a ``close()`` (or producer
+        death) that lands after the checks but before the dequeue used to
+        park this thread on an empty queue forever."""
+        while True:
+            if self._err is not None and self._q.empty():
+                raise RuntimeError(
+                    "round prefetch thread failed") from self._err
+            if self._stop.is_set() and self._q.empty():
+                raise RuntimeError("RoundPrefetcher used after close()")
+            try:
+                item = self._q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            if item is self._SENTINEL:
+                raise RuntimeError(
+                    "round prefetch thread failed") from self._err
+            return item
 
     def close(self):
         self._stop.set()
@@ -1054,3 +1229,10 @@ class RoundPrefetcher:
             except queue.Empty:
                 break
         self._thread.join(timeout=10)
+        if self._thread.is_alive():
+            # a silent failed join leaks a thread that still owns the rng
+            # and may touch a torn-down engine; surface it instead
+            warnings.warn(
+                "RoundPrefetcher thread did not exit within 10s of close(); "
+                "it may be wedged in a device transfer",
+                RuntimeWarning, stacklevel=2)

@@ -62,6 +62,23 @@ class FLConfig:
     #                 normalized to lists so equality survives a JSON trip)
     lbg_variant: str = "dense"       # registry key: dense | topk | null | ...
     lbg_kw: Optional[dict] = None    # e.g. {"k_frac": 0.1} for topk
+    aggregator: str = "mean"         # registry key: mean | trimmed_mean |
+    #   coordinate_median | geometric_median | ... "mean" (default) keeps
+    #   the engine's streaming weighted-mean fold — bit-for-bit the
+    #   pre-robustness round history on every scheduler; every other rule
+    #   is Byzantine-robust and switches the schedulers into collect mode
+    #   (per-client payload stacks, O(K·M) peak — see repro.fed.robust).
+    aggregator_kw: Optional[dict] = None   # e.g. {"beta": 0.1} | {"iters": 8}
+    attack: Optional[str] = None     # registry key: sign_flip | scaled |
+    #   free_rider | gaussian | label_flip | ... None = no attack (default).
+    attack_frac: float = 0.0         # fraction of clients made Byzantine
+    #   (a fixed round(attack_frac*K) cohort, drawn deterministically from
+    #   the seed — see repro.fed.attacks.select_byzantine)
+    attack_kw: Optional[dict] = None       # e.g. {"sigma": 2.0} for gaussian
+    dropout_frac: float = 0.0        # straggler fault injection: per round,
+    #   each sampled client independently drops out with this probability
+    #   (rides the participation-mask path; draws come from the dedicated
+    #   fault stream, so the batch/mask rng stream is untouched)
     fused_kernels: Optional[bool] = None
     # ^ the LBGM decision hot path. None (default) = auto: sparse
     #   scalar-round aggregation wherever the LBG store supports it (any
@@ -120,6 +137,19 @@ class FLConfig:
                 "aggregation everywhere), true, or false (legacy dense "
                 f"path) — got {self.fused_kernels!r}; JSON/CLI specs must "
                 "use the boolean literals, not 0/1")
+        # robustness knobs: fractions in range, attack_frac only with an
+        # attack named, kw dicts actually dicts
+        if not 0.0 <= self.attack_frac <= 1.0:
+            bad(f"attack_frac must be in [0, 1], got {self.attack_frac}")
+        if not 0.0 <= self.dropout_frac < 1.0:
+            bad(f"dropout_frac must be in [0, 1), got {self.dropout_frac}")
+        if self.attack is None and self.attack_frac > 0:
+            bad(f"attack_frac={self.attack_frac} but attack=None — name an "
+                "attack (e.g. attack='sign_flip') or set attack_frac=0")
+        for kw_name in ("aggregator_kw", "attack_kw"):
+            kw = getattr(self, kw_name)
+            if kw is not None and not isinstance(kw, dict):
+                bad(f"{kw_name} must be a dict or None, got {kw!r}")
         # registry-keyed fields: fail now, with the registered names in the
         # message, instead of deep inside the engine build
         from repro.fed import registry as reg
@@ -132,6 +162,12 @@ class FLConfig:
         if self.compressor not in reg.COMPRESSORS:
             bad(f"unknown compressor {self.compressor!r}; registered "
                 f"compressors: {reg.COMPRESSORS.names()}")
+        if self.aggregator not in reg.AGGREGATORS:
+            bad(f"unknown aggregator {self.aggregator!r}; registered "
+                f"aggregators: {reg.AGGREGATORS.names()}")
+        if self.attack is not None and self.attack not in reg.ATTACKS:
+            bad(f"unknown attack {self.attack!r}; registered "
+                f"attacks: {reg.ATTACKS.names()}")
 
     # ------------------------------------------------------------- views
     @property

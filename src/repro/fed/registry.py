@@ -1,7 +1,8 @@
 """String-keyed component registries for the declarative experiment API.
 
 Every pluggable piece of an FL experiment — model, dataset, partitioner,
-uplink compressor, client scheduler, LBG storage scheme — resolves through
+uplink compressor, client scheduler, LBG storage scheme, server
+aggregation rule, Byzantine attack — resolves through
 one of the registries below, so an :class:`~repro.fed.experiment.ExperimentSpec`
 can name components by string and round-trip through JSON, and third-party
 code can extend the system without touching ``fed/engine.py``:
@@ -101,6 +102,8 @@ PARTITIONERS = Registry("partitioner",
 COMPRESSORS = Registry("compressor", builtin_modules=("repro.compression",))
 SCHEDULERS = Registry("scheduler", builtin_modules=("repro.fed.engine",))
 LBG_STORES = Registry("lbg_store", builtin_modules=("repro.fed.engine",))
+AGGREGATORS = Registry("aggregator", builtin_modules=("repro.fed.robust",))
+ATTACKS = Registry("attack", builtin_modules=("repro.fed.attacks",))
 
 register_model = MODELS.register
 register_dataset = DATASETS.register
@@ -108,3 +111,5 @@ register_partitioner = PARTITIONERS.register
 register_compressor = COMPRESSORS.register
 register_scheduler = SCHEDULERS.register
 register_lbg_store = LBG_STORES.register
+register_aggregator = AGGREGATORS.register
+register_attack = ATTACKS.register

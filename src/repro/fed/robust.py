@@ -1,0 +1,279 @@
+"""Byzantine-robust server aggregation (ROADMAP open item 3).
+
+LBGM collapses a client's update to one scalar per bank entry on a recycle
+round, which raises a question the paper never answers: is scalar-round
+aggregation more or less robust to poisoned clients than dense FedAvg?
+This module supplies the server half of that experiment: registry-pluggable
+*aggregation rules* that replace the engine's weighted-mean fold with a
+robust location estimate of the per-client update distribution.
+
+Two aggregation modes share the engine's aggregator seam
+(``sched.run(client_fn, agg, ...)``):
+
+* **streaming** (``"mean"``, the default) — the existing strictly
+  sequential ``carry += w_k * g_k`` fold (``DenseAggregator`` /
+  ``SparseTopKAggregator`` in ``fed/engine.py``). O(1) client state at a
+  time; bit-for-bit identical to every pre-robustness round history.
+* **collect** (every robust rule) — a median cannot be folded one client
+  at a time, so the schedulers stack the per-client payloads (dense
+  g_tilde *or* the sparse (idx, val) scalar-round payload + gscale) across
+  chunks and hand the full (K, ...) stack to the rule's :meth:`reduce`.
+  Peak memory is O(K·M) — the honest price of a coordinate-wise
+  cross-client view; the sparse payload is densified to the bank's block
+  layout first (gscale folded in), so robust rules see the same update
+  vectors the mean would have accumulated.
+
+Every rule is *weighted*: the engine passes the round's normalized client
+weights (data-size x participation, summing to 1 over participants), so
+zero-weight clients — unsampled, dropped out, or phantom chunk padding
+(whose values may be NaN) — carry no mass and are masked out of every
+estimate. All rules are pure ``jnp`` with static shapes (the geometric
+median is a fixed-iteration smoothed Weiszfeld), so they jit and shard
+like the rest of the round function.
+
+Built-in rules (``repro.fed.registry.AGGREGATORS``; extend with
+``@register_aggregator``):
+
+* ``"mean"``            — streaming marker (see above), the default.
+* ``"trimmed_mean"``    — per-coordinate weighted trimmed mean: the
+  ``beta`` weight-mass tails of the sorted per-coordinate distribution are
+  discarded and the remaining mass averaged (``beta=0.1``).
+* ``"coordinate_median"`` (alias ``"median"``) — per-coordinate weighted
+  median (the 0.5 weight-mass crossing of the sorted values).
+* ``"geometric_median"`` (alias ``"gm"``) — smoothed Weiszfeld iteration
+  toward argmin_z sum_k w_k ||g_k - z|| over whole update vectors
+  (``iters=8``, ``eps=1e-6``; cf. blades' AutoGM aggregator). Fixed
+  iteration count so the round function stays static for pjit/TPU.
+
+Config surface: ``FLConfig.aggregator`` / ``FLConfig.aggregator_kw``
+(validated at construction, JSON round-trips through ``ExperimentSpec``
+and the ``repro.fed.run`` CLI). The client-side attack components this
+subsystem is measured against live in ``repro.fed.attacks``;
+``benchmarks/robustness.py`` runs the accuracy-vs-attack-fraction grid.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lbgm import _block_layout
+from repro.fed.registry import register_aggregator
+
+
+class StreamingMean:
+    """Marker rule: keep the engine's streaming weighted-mean fold.
+
+    The engine checks ``streaming`` and routes to its existing
+    ``DenseAggregator`` / ``SparseTopKAggregator`` — the exact pre-robust
+    code path, so ``aggregator="mean"`` (the default) reproduces pre-PR
+    round histories bit-for-bit on every scheduler.
+    """
+
+    streaming = True
+
+
+def mask_invalid(w, g):
+    """Zero out rows whose weight is <= 0, per leaf.
+
+    Mirrors the streaming fold's ``w_k > 0`` gate: phantom pad clients run
+    the loss on all-zero batches and may emit NaN/Inf updates that would
+    poison a sort or a distance, even at zero weight.
+    """
+    def f(x):
+        wcol = w.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(wcol > 0, x.astype(jnp.float32), 0.0)
+    return jax.tree.map(f, g)
+
+
+def _sorted_with_weights(w, x):
+    """Sort one stacked leaf along the client axis, carrying weights.
+
+    Returns ``(values, weights, cum_weights)`` each shaped like ``x``,
+    sorted ascending per coordinate; ``cum_weights`` is the inclusive
+    cumulative weight (total mass = sum(w)).
+    """
+    order = jnp.argsort(x, axis=0)
+    v = jnp.take_along_axis(x, order, axis=0)
+    wfull = jnp.broadcast_to(
+        w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(jnp.float32), x.shape)
+    ws = jnp.take_along_axis(wfull, order, axis=0)
+    return v, ws, jnp.cumsum(ws, axis=0)
+
+
+class TrimmedMean:
+    """Per-coordinate weighted trimmed mean.
+
+    For each coordinate, sort the K client values, drop ``beta`` weight
+    mass from each tail of the (weighted) empirical distribution, and
+    average what remains. ``beta=0`` is exactly the weighted mean;
+    ``beta -> 0.5`` approaches the weighted median. Defined on weight
+    mass (not client counts), so zero-weight clients never dilute the trim
+    and non-uniform data-size weights are respected.
+    """
+
+    def __init__(self, beta: float = 0.1):
+        if not 0.0 <= beta < 0.5:
+            raise ValueError(
+                f"trimmed_mean: beta must be in [0, 0.5), got {beta}")
+        self.beta = float(beta)
+
+    def reduce(self, w, g):
+        g = mask_invalid(w, g)
+        total = jnp.sum(w.astype(jnp.float32))
+        lo, hi = self.beta * total, (1.0 - self.beta) * total
+
+        def f(x):
+            v, ws, cum = _sorted_with_weights(w, x)
+            # effective mass of each sorted sample inside the [lo, hi]
+            # weight window (0 for fully trimmed samples, partial at the
+            # window edges) — the weighted generalization of "drop the
+            # beta*K smallest and largest values"
+            eff = jnp.clip(cum, lo, hi) - jnp.clip(cum - ws, lo, hi)
+            return jnp.sum(eff * v, axis=0) / jnp.maximum(hi - lo, 1e-20)
+        return jax.tree.map(f, g)
+
+
+class CoordinateMedian:
+    """Per-coordinate weighted median: the value at which the sorted
+    per-coordinate distribution first crosses half the total weight."""
+
+    def reduce(self, w, g):
+        g = mask_invalid(w, g)
+        half = 0.5 * jnp.sum(w.astype(jnp.float32))
+
+        def f(x):
+            v, _, cum = _sorted_with_weights(w, x)
+            pick = jnp.argmax(cum >= half, axis=0)
+            return jnp.take_along_axis(v, pick[None], axis=0)[0]
+        return jax.tree.map(f, g)
+
+
+class GeometricMedian:
+    """Smoothed Weiszfeld geometric median over whole update vectors.
+
+    ``iters`` fixed-point steps of z <- sum_k (w_k / max(||g_k - z||,
+    eps)) g_k / sum_k (w_k / max(||g_k - z||, eps)), initialized at the
+    weighted mean. The fixed iteration count keeps the round function
+    static (jits, shards); ``eps`` smooths the reweighting so a client
+    sitting exactly on the current estimate cannot blow up the weights
+    (blades' AutoGM uses the same guard). Distances are accumulated
+    leaf-wise in fp32 — no concatenated O(K·M) copy beyond the stack the
+    collect mode already holds.
+    """
+
+    def __init__(self, iters: int = 8, eps: float = 1e-6):
+        if iters < 1:
+            raise ValueError(
+                f"geometric_median: iters must be >= 1, got {iters}")
+        if eps <= 0:
+            raise ValueError(
+                f"geometric_median: eps must be > 0, got {eps}")
+        self.iters = int(iters)
+        self.eps = float(eps)
+
+    def reduce(self, w, g):
+        g = mask_invalid(w, g)
+        wf = w.astype(jnp.float32)
+
+        def wavg(weights):
+            denom = jnp.maximum(jnp.sum(weights), 1e-20)
+            return jax.tree.map(
+                lambda x: jnp.tensordot(weights, x, axes=1) / denom, g)
+
+        def body(_, z):
+            d2 = sum(
+                jnp.sum((x - z[name][None]) ** 2,
+                        axis=tuple(range(1, x.ndim)))
+                for name, x in g.items())
+            inv = wf / jnp.maximum(jnp.sqrt(d2), self.eps)
+            # clients at zero weight contribute zero mass; the masked rows
+            # are exact zeros so their distances are finite
+            return wavg(inv)
+
+        return jax.lax.fori_loop(0, self.iters, body, wavg(wf))
+
+
+# ------------------------------------------------- engine collect adapters
+
+
+class CollectDenseAggregator:
+    """Collect-mode adapter over dense per-client g_tilde stacks.
+
+    The schedulers hand :meth:`reduce` the full (K_padded, ...) stack of
+    dense client updates plus the round's normalized weights; the wrapped
+    rule turns it into one params-shaped aggregate.
+    """
+
+    collect = True
+    sparse = False
+
+    def __init__(self, rule):
+        self.rule = rule
+
+    def reduce(self, w, gt_stack):
+        return self.rule.reduce(w, gt_stack)
+
+
+class CollectSparseAggregator:
+    """Collect-mode adapter over sparse (idx, val) scalar-round payloads.
+
+    Each client's payload is densified into the bank's (nb, block) block
+    layout with its ``gscale`` (rho on a recycle round, 1 on a full round)
+    folded in — reconstructing exactly the g_tilde the streaming
+    ``SparseTopKAggregator`` would have accumulated — and the stacked
+    (K_padded, nb, block) views go through the wrapped rule
+    coordinate-wise before the final reshape back to the params layout.
+    Peak memory is O(K·M): a robust rule needs the cross-client view per
+    coordinate, so the sparse wire format cannot stay sparse server-side.
+    """
+
+    collect = True
+    sparse = True
+
+    def __init__(self, rule, params, k_frac: float):
+        self.rule = rule
+        self._layout = {
+            name: (leaf.shape, int(leaf.size))
+            + _block_layout(int(leaf.size), k_frac)[:2]
+            for name, leaf in params.items()}
+
+    def reduce(self, w, out):
+        send, gscale = out  # leaves (K, nb, kb); gscale (K,)
+
+        def densify(name, sk):
+            _, _, nb, block = self._layout[name]
+
+            def one(idx, val, s):
+                dense = jnp.zeros((nb, block), jnp.float32)
+                return jnp.put_along_axis(dense, idx, s * val, axis=1,
+                                          inplace=False)
+            return jax.vmap(one)(sk["idx"], sk["val"],
+                                 gscale.astype(jnp.float32))
+
+        stacks = {name: densify(name, sk) for name, sk in send.items()}
+        red = self.rule.reduce(w, stacks)
+        return {name: red[name].reshape(-1)[:size].reshape(shape)
+                for name, (shape, size, _, _) in self._layout.items()}
+
+
+# ------------------------------------------------------------ registry
+
+register_aggregator("mean", lambda cfg: StreamingMean())
+register_aggregator("trimmed_mean")(
+    lambda cfg: TrimmedMean(**(cfg.aggregator_kw or {})))
+register_aggregator("coordinate_median", aliases=("median",))(
+    lambda cfg: CoordinateMedian(**(cfg.aggregator_kw or {})))
+register_aggregator("geometric_median", aliases=("gm",))(
+    lambda cfg: GeometricMedian(**(cfg.aggregator_kw or {})))
+
+
+def make_robust_rule(cfg):
+    """Resolve ``cfg.aggregator`` through the registry, with an
+    actionable error when ``aggregator_kw`` doesn't match the rule."""
+    from repro.fed.registry import AGGREGATORS
+    try:
+        return AGGREGATORS.get(cfg.aggregator)(cfg)
+    except TypeError as e:
+        raise ValueError(
+            f"FLConfig.aggregator_kw {cfg.aggregator_kw!r} does not match "
+            f"aggregator {cfg.aggregator!r}: {e}") from e

@@ -215,6 +215,7 @@ def test_prefetch_exception_propagates_midrun_sharded(fcn_setup):
         src.close()
 
 
+@pytest.mark.slow
 def test_prefetch_rng_stream_invariant_under_2d_mesh(fcn_setup):
     """Prefetched and synchronous runs draw the same stream — history and
     params bit-identical — under the 2-D sharded scheduler."""

@@ -1,0 +1,451 @@
+"""Robust aggregation + attack injection + round-pipeline regression tests.
+
+Five pillars:
+  (a) the robust rules against pure-NumPy float64 oracles (smoothed
+      Weiszfeld geometric median) and their algebraic contracts
+      (client-permutation invariance, beta=0 trimmed mean == weighted
+      mean, NaN phantom rows masked out),
+  (b) ``aggregator="mean"`` is the pre-robustness streaming fold —
+      bit-for-bit the default engine's round history on all three
+      schedulers — and the collect path agrees with it to fp tolerance
+      on both dense and sparse (scalar-round) payloads,
+  (c) attack components are deterministic under a fixed seed (including
+      the sparse scalar-round payload path) and leave clean runs
+      untouched,
+  (d) RoundPrefetcher regression: ``next()`` racing ``close()`` raises
+      instead of deadlocking, the producer stops between rng draws, and
+      a failed join is surfaced,
+  (e) ``record_bench`` writes atomically and backs up (never discards)
+      an unreadable trajectory.
+"""
+import json
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.fed import FLConfig, FLEngine
+from repro.fed.attacks import fault_rng, make_attack, select_byzantine
+from repro.fed.engine import RoundPrefetcher
+from repro.fed.robust import (CoordinateMedian, GeometricMedian,
+                              TrimmedMean, make_robust_rule)
+
+# --------------------------------------------------------------- fixtures
+
+
+@pytest.fixture(scope="module")
+def fcn_setup():
+    from repro.configs import get_config
+    from repro.data.synthetic import mixture_classification
+    from repro.models.smallnets import (apply_fcn, classifier_loss,
+                                        init_fcn)
+    cfg = get_config("paper-fcn")
+    params, _ = init_fcn(jax.random.PRNGKey(0), cfg)
+    x, y = mixture_classification(1200, 10, seed=0)
+    loss_fn = lambda p, b: classifier_loss(apply_fcn, p, cfg,
+                                           b["x"], b["y"])
+    return params, x, y, loss_fn
+
+
+def make_engine(fcn_setup, K=6, **flkw):
+    from repro.fed import partition_label_skew
+    params, x, y, loss_fn = fcn_setup
+    parts = partition_label_skew(y, K, 3, seed=0)
+    data = [{"x": x[p], "y": y[p]} for p in parts]
+    return FLEngine(loss_fn, params, data,
+                    FLConfig(num_clients=K, tau=2, lr=0.05, batch_size=16,
+                             **flkw))
+
+
+def run_rounds(fl, n=2, seed=0):
+    rng = np.random.RandomState(seed)
+    for _ in range(n):
+        fl.run_round(rng)
+    return fl
+
+
+def _tree_equal(a, b):
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                      err_msg=k)
+
+
+def _rand_stack(rng, K):
+    return {"w": rng.randn(K, 5, 3).astype(np.float32),
+            "b": rng.randn(K, 7).astype(np.float32)}
+
+
+# ------------------------------------------- (a) rule oracles and algebra
+
+
+def np_geometric_median(w, stacks, iters, eps):
+    """Float64 smoothed-Weiszfeld reference on flattened vectors."""
+    K = len(w)
+    flat = np.concatenate(
+        [np.where(w.reshape((-1,) + (1,) * (stacks[k].ndim - 1)) > 0,
+                  stacks[k], 0.0).reshape(K, -1).astype(np.float64)
+         for k in sorted(stacks)], axis=1)
+    wf = w.astype(np.float64)
+    z = wf @ flat / max(wf.sum(), 1e-20)
+    for _ in range(iters):
+        d = np.maximum(np.linalg.norm(flat - z, axis=1), eps)
+        inv = wf / d
+        z = inv @ flat / max(inv.sum(), 1e-20)
+    return z
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_geometric_median_matches_numpy_oracle(seed):
+    rng = np.random.RandomState(seed)
+    K = 9
+    w = rng.rand(K).astype(np.float32)
+    w[seed % K] = 0.0                       # an unsampled client
+    w /= w.sum()
+    stacks = _rand_stack(rng, K)
+    rule = GeometricMedian(iters=8, eps=1e-6)
+    out = rule.reduce(w, {k: np.asarray(v) for k, v in stacks.items()})
+    ref = np_geometric_median(w, stacks, iters=8, eps=1e-6)
+    got = np.concatenate([np.asarray(out[k], np.float64).ravel()
+                          for k in sorted(out)])
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("rule", [TrimmedMean(beta=0.15),
+                                  CoordinateMedian(),
+                                  GeometricMedian(iters=6)],
+                         ids=["trimmed", "median", "gm"])
+def test_rules_client_permutation_invariant(rule):
+    rng = np.random.RandomState(7)
+    K = 8
+    w = rng.rand(K).astype(np.float32)
+    w /= w.sum()
+    stacks = _rand_stack(rng, K)
+    perm = rng.permutation(K)
+    out = rule.reduce(w, stacks)
+    out_p = rule.reduce(w[perm], {k: v[perm] for k, v in stacks.items()})
+    for k in out:
+        np.testing.assert_allclose(np.asarray(out[k]),
+                                   np.asarray(out_p[k]),
+                                   rtol=1e-5, atol=1e-6, err_msg=k)
+
+
+def test_trimmed_mean_beta0_is_weighted_mean():
+    rng = np.random.RandomState(3)
+    K = 7
+    w = rng.rand(K).astype(np.float32)
+    w /= w.sum()
+    stacks = _rand_stack(rng, K)
+    out = TrimmedMean(beta=0.0).reduce(w, stacks)
+    for k in out:
+        ref = np.tensordot(w.astype(np.float64),
+                           stacks[k].astype(np.float64), axes=1)
+        np.testing.assert_allclose(np.asarray(out[k]), ref,
+                                   rtol=1e-5, atol=1e-6, err_msg=k)
+
+
+def test_coordinate_median_uniform_weights_is_np_median():
+    rng = np.random.RandomState(4)
+    K = 9                                   # odd: the median is unique
+    w = np.full(K, 1.0 / K, np.float32)
+    stacks = _rand_stack(rng, K)
+    out = CoordinateMedian().reduce(w, stacks)
+    for k in out:
+        np.testing.assert_allclose(np.asarray(out[k]),
+                                   np.median(stacks[k], axis=0),
+                                   rtol=1e-6, atol=1e-7, err_msg=k)
+
+
+@pytest.mark.parametrize("rule", [TrimmedMean(), CoordinateMedian(),
+                                  GeometricMedian()],
+                         ids=["trimmed", "median", "gm"])
+def test_zero_weight_nan_rows_are_masked(rule):
+    """Phantom pad clients may emit NaN at zero weight; every rule must
+    produce the same answer as if the row did not exist."""
+    rng = np.random.RandomState(5)
+    K = 6
+    w = rng.rand(K).astype(np.float32)
+    w /= w.sum()
+    stacks = _rand_stack(rng, K)
+    w_pad = np.concatenate([w, np.zeros(2, np.float32)])
+    stacks_pad = {k: np.concatenate(
+        [v, np.full((2,) + v.shape[1:], np.nan, np.float32)])
+        for k, v in stacks.items()}
+    out = rule.reduce(w, stacks)
+    out_pad = rule.reduce(w_pad, stacks_pad)
+    for k in out:
+        got = np.asarray(out_pad[k])
+        assert np.isfinite(got).all(), k
+        np.testing.assert_allclose(got, np.asarray(out[k]),
+                                   rtol=1e-5, atol=1e-6, err_msg=k)
+
+
+def test_rule_kw_validation():
+    with pytest.raises(ValueError, match="beta"):
+        TrimmedMean(beta=0.5)
+    with pytest.raises(ValueError, match="iters"):
+        GeometricMedian(iters=0)
+    with pytest.raises(ValueError, match="aggregator_kw"):
+        make_robust_rule(FLConfig(aggregator="trimmed_mean",
+                                  aggregator_kw={"nope": 1}))
+    with pytest.raises(ValueError, match="unknown aggregator"):
+        FLConfig(aggregator="nope")
+    with pytest.raises(ValueError, match="attack_frac"):
+        FLConfig(attack_frac=0.5)           # no attack named
+    with pytest.raises(ValueError, match="unknown attack"):
+        FLConfig(attack="nope", attack_frac=0.1)
+
+
+# ----------------------- (b) engine seam: mean bit-for-bit, collect agrees
+
+
+@pytest.mark.parametrize("flkw", [
+    dict(scheduler="vmap"),
+    dict(scheduler="chunked", chunk_size=4),
+    dict(scheduler="sharded", chunk_size=4, lbg_variant="topk-sharded",
+         lbg_kw={"k_frac": 0.25}),
+], ids=["vmap", "chunked", "sharded"])
+def test_mean_knob_is_bitforbit_default(fcn_setup, flkw):
+    """aggregator="mean" (the default) routes to the pre-robustness
+    streaming fold — identical params and history, not merely close."""
+    base = dict(use_lbgm=True, delta_threshold=0.2, sample_frac=0.7)
+    fl_a = run_rounds(make_engine(fcn_setup, **base, **flkw))
+    fl_b = run_rounds(make_engine(fcn_setup, aggregator="mean",
+                                  **base, **flkw))
+    _tree_equal(fl_a.params, fl_b.params)
+    assert fl_a.history == fl_b.history
+
+
+@pytest.mark.parametrize("flkw", [
+    dict(fused_kernels=False),
+    dict(lbg_variant="topk", lbg_kw={"k_frac": 0.25}),
+], ids=["dense-payload", "sparse-payload"])
+def test_collect_beta0_trimmed_mean_agrees_with_streaming(fcn_setup,
+                                                          flkw):
+    """TrimmedMean(beta=0) through the collect path == the streaming
+    weighted mean (fp tolerance: the fold orders the sums differently).
+    The sparse case routes the (idx, val) scalar-round payloads through
+    CollectSparseAggregator's densify — checking it reconstructs exactly
+    the g_tilde the sparse streaming aggregator accumulates."""
+    base = dict(scheduler="chunked", chunk_size=4, use_lbgm=True,
+                delta_threshold=0.2)
+    fl_a = run_rounds(make_engine(fcn_setup, **base, **flkw))
+    fl_b = run_rounds(make_engine(fcn_setup, aggregator="trimmed_mean",
+                                  aggregator_kw={"beta": 0.0},
+                                  **base, **flkw))
+    for k in fl_a.params:
+        np.testing.assert_allclose(np.asarray(fl_a.params[k]),
+                                   np.asarray(fl_b.params[k]),
+                                   rtol=1e-4, atol=1e-5, err_msg=k)
+
+
+# --------------------------------------- (c) attack/fault determinism
+
+
+def test_select_byzantine_deterministic_and_sized():
+    a = select_byzantine(20, 0.25, seed=3)
+    b = select_byzantine(20, 0.25, seed=3)
+    np.testing.assert_array_equal(a, b)
+    assert a.sum() == 5
+    assert select_byzantine(20, 0.25, seed=4).tolist() != a.tolist()
+    assert select_byzantine(20, 0.0, seed=3).sum() == 0
+
+
+@pytest.mark.parametrize("flkw", [
+    dict(attack="gaussian", attack_kw={"sigma": 0.5}, fused_kernels=False),
+    dict(attack="sign_flip", lbg_variant="topk", lbg_kw={"k_frac": 0.25},
+         aggregator="geometric_median"),
+    dict(attack="label_flip", dropout_frac=0.3, sample_frac=0.8),
+], ids=["gaussian-dense", "signflip-sparse-gm", "labelflip-dropout"])
+def test_attacked_runs_deterministic_under_seed(fcn_setup, flkw):
+    """Same seed -> bit-identical attacked history (incl. the sparse
+    scalar-round payload path and dropout fault injection); and the
+    attack actually changes the run vs clean."""
+    base = dict(scheduler="chunked", chunk_size=4, use_lbgm=True,
+                delta_threshold=0.2, attack_frac=0.34)
+    base.update(flkw)
+    fl_a = run_rounds(make_engine(fcn_setup, **base), seed=1)
+    fl_b = run_rounds(make_engine(fcn_setup, **base), seed=1)
+    _tree_equal(fl_a.params, fl_b.params)
+    assert fl_a.history == fl_b.history
+    clean = dict(base, attack=None, attack_frac=0.0, dropout_frac=0.0)
+    fl_c = run_rounds(make_engine(fcn_setup, **clean), seed=1)
+    assert fl_a.history != fl_c.history
+
+
+def test_label_flip_corrupts_only_byzantine_cohort(fcn_setup):
+    fl = make_engine(fcn_setup, attack="label_flip", attack_frac=0.34,
+                     use_lbgm=False)
+    clean = make_engine(fcn_setup, use_lbgm=False)
+    byz = fl._byz
+    assert byz.sum() == 2
+    for k in range(fl.cfg.num_clients):
+        same = np.array_equal(np.asarray(fl.client_data[k]["y"]),
+                              np.asarray(clean.client_data[k]["y"]))
+        assert same == (byz[k] == 0), k
+
+
+def test_attack_components_pure():
+    """Payload attacks corrupt exactly the flagged clients (apply runs
+    per client — scalar byz flag — under the scheduler's vmap/scan)."""
+    rng = np.random.RandomState(0)
+    asg = {"w": rng.randn(4, 3).astype(np.float32)}
+    byz = np.array([0.0, 1.0, 0.0, 1.0], np.float32)
+    flip = make_attack(FLConfig(attack="sign_flip", attack_frac=0.5))
+    out = np.asarray(jax.vmap(lambda a, b: flip.apply(a, b, {}))(
+        asg, byz)["w"])
+    np.testing.assert_array_equal(out[[0, 2]], asg["w"][[0, 2]])
+    np.testing.assert_array_equal(out[[1, 3]], -asg["w"][[1, 3]])
+    rider = make_attack(FLConfig(attack="free_rider", attack_frac=0.5))
+    out = np.asarray(jax.vmap(lambda a, b: rider.apply(a, b, {}))(
+        asg, byz)["w"])
+    assert (out[[1, 3]] == 0).all() and (out[[0, 2]] != 0).any()
+    gauss = make_attack(FLConfig(attack="gaussian", attack_frac=0.5))
+    ex = gauss.round_extras(fault_rng(0), 4)
+    ex2 = gauss.round_extras(fault_rng(0), 4)
+    assert ex.keys() == ex2.keys()
+    for k in ex:
+        np.testing.assert_array_equal(ex[k], ex2[k])
+
+
+# ------------------------------------- (d) RoundPrefetcher regressions
+
+
+class _BlockingEngine:
+    """Fake engine whose batch draw parks until the prefetcher stops —
+    the schedule that exposes the next()/close() race deterministically:
+    the queue stays empty, so a consumer must wait, and a close() must
+    still unblock it."""
+
+    def __init__(self):
+        self.pf = None                      # set after construction
+        self.mask_draws = 0
+
+    def _sample_batches(self, rng):
+        # self.pf is assigned right after RoundPrefetcher() returns; the
+        # producer thread can get here first, so spin until it lands
+        while self.pf is None or not self.pf._stop.is_set():
+            time.sleep(0.005)
+        return rng.rand(2)
+
+    def _sample_mask(self, rng):
+        self.mask_draws += 1
+        return rng.rand(2)
+
+
+def test_prefetcher_next_unblocks_on_concurrent_close():
+    """Regression: next()'s pre-checks were not atomic with its blocking
+    q.get(), so a close() landing in between parked the consumer forever.
+    The timeout-loop get must surface the close as a RuntimeError."""
+    eng = _BlockingEngine()
+    pf = RoundPrefetcher(eng, np.random.RandomState(0), depth=1)
+    eng.pf = pf
+    outcome = {}
+
+    def consume():
+        try:
+            pf.next()
+            outcome["r"] = "returned"
+        except RuntimeError as e:
+            outcome["r"] = str(e)
+
+    t = threading.Thread(target=consume, daemon=True)
+    t.start()
+    time.sleep(0.2)                         # consumer is inside next()
+    assert t.is_alive()                     # ...and blocked, queue empty
+    pf.close()
+    t.join(timeout=5)
+    assert not t.is_alive(), "next() deadlocked against close()"
+    assert "after close" in outcome["r"]
+
+
+def test_prefetcher_producer_stops_between_rng_draws():
+    """close() during the batch draw must not trigger the mask draw —
+    the producer re-checks the stop flag between the two rng draws."""
+    eng = _BlockingEngine()
+    pf = RoundPrefetcher(eng, np.random.RandomState(0), depth=1)
+    eng.pf = pf
+    time.sleep(0.1)                         # producer parked in batch draw
+    pf.close()
+    assert not pf._thread.is_alive()
+    assert eng.mask_draws == 0
+
+
+def test_prefetcher_close_warns_if_thread_outlives_join():
+    class _FastEngine:
+        def _sample_batches(self, rng):
+            return rng.rand(2)
+
+        def _sample_mask(self, rng):
+            return rng.rand(2)
+
+    pf = RoundPrefetcher(_FastEngine(), np.random.RandomState(0), depth=1)
+
+    class _WedgedThread:
+        def join(self, timeout=None):
+            pass
+
+        def is_alive(self):
+            return True
+
+    real = pf._thread
+    pf._thread = _WedgedThread()
+    try:
+        with pytest.warns(RuntimeWarning, match="did not exit"):
+            pf.close()
+    finally:
+        pf._thread = real
+        pf.close()
+
+
+def test_prefetcher_matches_synchronous_stream(fcn_setup):
+    """The prefetcher is still bit-identical to the synchronous path
+    after the race fixes (the contract its docstring states)."""
+    fl_a = make_engine(fcn_setup, use_lbgm=True, delta_threshold=0.2)
+    fl_b = make_engine(fcn_setup, use_lbgm=True, delta_threshold=0.2)
+    rng_a, rng_b = np.random.RandomState(2), np.random.RandomState(2)
+    src = fl_a.prefetcher(rng_a)
+    try:
+        for _ in range(2):
+            fl_a.run_round(src)
+    finally:
+        src.close()
+    for _ in range(2):
+        fl_b.run_round(rng_b)
+    _tree_equal(fl_a.params, fl_b.params)
+    assert fl_a.history == fl_b.history
+
+
+# ------------------------------------------- (e) record_bench atomicity
+
+
+def test_record_bench_appends_atomically(tmp_path, monkeypatch):
+    from benchmarks.common import BENCH_PATH_ENV, record_bench
+    path = tmp_path / "B.json"
+    monkeypatch.setenv(BENCH_PATH_ENV, str(path))
+    record_bench("a", 1.0, {"k": 1})
+    record_bench("b", 2.0)
+    entries = json.loads(path.read_text())
+    assert [e["name"] for e in entries] == ["a", "b"]
+    assert entries[0]["metadata"] == {"k": 1}
+    # no temp droppings left behind
+    assert [p.name for p in tmp_path.iterdir()] == ["B.json"]
+
+
+def test_record_bench_backs_up_corrupt_trajectory(tmp_path, monkeypatch):
+    from benchmarks.common import BENCH_PATH_ENV, record_bench
+    path = tmp_path / "B.json"
+    monkeypatch.setenv(BENCH_PATH_ENV, str(path))
+    path.write_text("{truncated")
+    with pytest.warns(RuntimeWarning, match="unreadable bench trajectory"):
+        record_bench("fresh", 1.0)
+    assert (tmp_path / "B.json.corrupt-0").read_text() == "{truncated"
+    entries = json.loads(path.read_text())
+    assert [e["name"] for e in entries] == ["fresh"]
+    # a JSON object (not array) is also backed up, not silently reset
+    path.write_text('{"not": "an array"}\n')
+    with pytest.warns(RuntimeWarning, match="expected a JSON array"):
+        record_bench("again", 2.0)
+    assert os.path.exists(tmp_path / "B.json.corrupt-1")

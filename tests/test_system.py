@@ -13,6 +13,7 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+@pytest.mark.slow
 def test_train_driver_end_to_end(tmp_path):
     """The public training driver: loss decreases and LBGM saves uplink."""
     from repro.launch.train import main

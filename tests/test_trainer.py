@@ -25,6 +25,7 @@ def _batch(key, cfg, K, b=2, T=32, tau=1):
     return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=-1)}
 
 
+@pytest.mark.slow
 def test_force_full_rounds_matches_no_lbgm(key):
     """delta<0 => every round is a full-gradient round => identical params
     to the LBGM-off baseline (paper takeaway 1 at trainer level)."""
