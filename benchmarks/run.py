@@ -15,7 +15,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig5,fig6,fig7,fig8,kernels,"
-                         "cohort,robustness")
+                         "cohort,robustness,wire_bytes")
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--toy", action="store_true",
                     help="tiny problem sizes (CI smoke): small kernel "
@@ -68,6 +68,12 @@ def main() -> None:
                            headline_frac=0.25)
         else:
             robustness.run(rounds=args.rounds)
+    if on("wire_bytes"):
+        from benchmarks import wire_bytes
+        if args.toy:
+            wire_bytes.run(rounds=3, num_clients=8, n_data=320)
+        else:
+            wire_bytes.run(rounds=args.rounds)
 
 
 if __name__ == '__main__':

@@ -1,0 +1,134 @@
+"""Wire codec benchmark: real bytes-per-round and accuracy vs codec.
+
+The question this grid answers is the one ``repro.comm.wire`` exists
+for: how many *bytes* does a round actually ship once the payload is
+encoded, and what does quantization cost in accuracy? Each row is one
+cell of
+
+    {dense FedAvg, LBGM scalar rounds} x {none, int8, fp8}
+
+with the measured bytes/round as the row value (NOT a time — flagged in
+``derived``) and final held-out accuracy in the metadata, written to
+BENCH_engine.json so byte trajectories across revisions are diffable
+the same way the perf rows are.
+
+Regimes (the fig5 FCN config, as in the robustness grid):
+
+* ``dense``  — ``use_lbgm=False``: plain FedAvg; quantized codecs encode
+  the dense update (1 byte/param + one fp32 scale per leaf).
+* ``scalar`` — LBGM with the top-k store and ``delta_threshold=0.9``:
+  after the round-0 refresh most rounds recycle (1-byte e4m3 rho on the
+  wire for quantized codecs, 4-byte fp32 for ``none``); full rounds ship
+  the sparse payload (values at the codec's width + varint-delta
+  indices vs raw 4-byte ones for ``none``).
+
+The headline cell (the PR's acceptance gate): in the ``scalar`` regime,
+``int8`` must cut total wire bytes by >= ``MIN_RATIO`` (3x) *on top of*
+LBGM's fp32 wire while staying within ``ACC_TOL`` of the fp32 run's
+final accuracy — compression stacking on recycling, not replacing it.
+"""
+from __future__ import annotations
+
+from benchmarks.common import build_spec, record_bench, spec_metadata
+
+#: acceptance: int8 total wire bytes vs codec="none" in the scalar regime
+MIN_RATIO = 3.0
+#: and its final accuracy must stay within this of the fp32 run
+ACC_TOL = 0.03
+
+CODECS = ("none", "int8", "fp8")
+
+
+def _cell(regime: str, codec: str, rounds: int, num_clients: int,
+          n_data: int, delta: float = 0.9) -> dict:
+    """Run one grid cell; returns byte + accuracy measurements."""
+    import numpy as np
+
+    from repro.fed import run_experiment
+
+    flkw = dict(codec=codec, sample_frac=1.0)
+    if regime == "scalar":
+        flkw.update(use_lbgm=True, lbg_variant="topk",
+                    lbg_kw={"k_frac": 0.1}, delta_threshold=delta)
+    else:
+        flkw.update(use_lbgm=False)
+    spec = build_spec(num_clients=num_clients, n_data=n_data,
+                      n_eval=max(200, n_data // 4),
+                      name=f"wire-{regime}-{codec}", **flkw)
+    result = run_experiment(spec, rounds)
+    last = result.records[-1]
+    return {
+        "test_acc": float(result.final_eval["test_acc"]),
+        "frac_scalar": float(np.mean([r.frac_scalar
+                                      for r in result.records])),
+        "total_wire_bytes": float(last.total_wire_bytes),
+        "bytes_per_round": float(last.total_wire_bytes) / rounds,
+        "wire_savings": float(last.wire_savings),
+        "spec": spec,
+    }
+
+
+def _emit_bytes(name: str, cell: dict, base: dict, **meta) -> None:
+    """Bytes row: CSV + BENCH_engine.json, value flagged as bytes."""
+    bpr = cell["bytes_per_round"]
+    ratio = base["total_wire_bytes"] / max(cell["total_wire_bytes"], 1.0)
+    derived = (f"bytes_per_round={bpr:.0f} ratio_vs_none={ratio:.2f} "
+               f"test_acc={cell['test_acc']:.3f} "
+               f"wire_savings={cell['wire_savings']:.3f} "
+               f"frac_scalar={cell['frac_scalar']:.2f} (row value is "
+               "bytes/round, not a time)")
+    print(f"{name},{bpr:.0f},{derived}")
+    record_bench(name, bpr, {
+        "derived": derived, "bytes_per_round": bpr,
+        "total_wire_bytes": cell["total_wire_bytes"],
+        "ratio_vs_none": ratio, "test_acc": cell["test_acc"],
+        "acc_gap_vs_none": base["test_acc"] - cell["test_acc"],
+        "wire_savings": cell["wire_savings"],
+        "frac_scalar": cell["frac_scalar"], **meta,
+        **spec_metadata(cell["spec"]),
+    })
+
+
+def run(rounds: int = 25, num_clients: int = 20, n_data: int = 2000,
+        codecs=CODECS, delta: float = 0.9) -> None:
+    for regime in ("dense", "scalar"):
+        cells = {}
+        for codec in codecs:
+            cells[codec] = _cell(regime, codec, rounds=rounds,
+                                 num_clients=num_clients, n_data=n_data,
+                                 delta=delta)
+            _emit_bytes(f"wire_bytes/{regime}/{codec}", cells[codec],
+                        cells.get("none", cells[codec]), regime=regime)
+        if regime == "scalar":
+            _headline(cells)
+
+
+def _headline(cells: dict) -> None:
+    """The acceptance summary row: int8 >= MIN_RATIO x fewer wire bytes
+    than fp32 LBGM at <= ACC_TOL accuracy gap. Skipped (with a note) if
+    the grid didn't include both cells."""
+    if "none" not in cells or "int8" not in cells:
+        print("wire_bytes/scalar/headline,nan,skipped "
+              "(none/int8 not both in grid)")
+        return
+    none, int8 = cells["none"], cells["int8"]
+    ratio = none["total_wire_bytes"] / max(int8["total_wire_bytes"], 1.0)
+    gap = none["test_acc"] - int8["test_acc"]
+    ok = ratio >= MIN_RATIO and abs(gap) <= ACC_TOL
+    derived = (f"int8 vs fp32 LBGM: byte_ratio={ratio:.2f} "
+               f"(>= {MIN_RATIO}), acc_gap={gap:+.3f} (|.| <= {ACC_TOL}) "
+               f"-> {'PASS' if ok else 'FAIL'} (row value is the byte "
+               "ratio, not a time)")
+    name = "wire_bytes/scalar/headline"
+    print(f"{name},{ratio:.2f},{derived}")
+    record_bench(name, ratio, {
+        "derived": derived, "byte_ratio": ratio, "acc_gap": gap,
+        "min_ratio": MIN_RATIO, "acc_tol": ACC_TOL, "pass": ok,
+        "none_bytes_per_round": none["bytes_per_round"],
+        "int8_bytes_per_round": int8["bytes_per_round"],
+    })
+
+
+if __name__ == "__main__":
+    import benchmarks  # noqa: F401  (src/ path bootstrap)
+    run()

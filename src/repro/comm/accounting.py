@@ -1,8 +1,22 @@
 """Logical communication accounting — the paper's reported metric
-("floating-point parameters shared per worker", Figs. 5-8).
+("floating-point parameters shared per worker", Figs. 5-8) plus the
+real-byte wire ledger added with the codec subsystem.
 
-The physical ICI collective of the mesh simulation is analyzed separately by
-``repro.analysis.roofline``; this module tracks the FL uplink a real
+Two parallel books are kept per round:
+
+* ``uplink_floats`` / ``vanilla_floats`` — the paper's idealized
+  fp32-scalar count (a top-k value is 1.5 floats, a scalar round is 1
+  float), unchanged since PR 1 so historical trajectories stay
+  comparable.
+* ``wire_bytes`` / ``vanilla_wire_bytes`` — bytes a NIC would actually
+  move under the active :mod:`repro.comm.wire` codec (quantized values,
+  varint-delta index streams, per-row scales, 1-byte rho scalars).
+  ``vanilla_wire_bytes`` prices the same participants shipping the dense
+  model in fp32 (4 bytes/parameter), so ``wire_savings`` reports the
+  end-to-end reduction of sparsification *and* quantization together.
+
+The physical ICI collective of the mesh simulation is analyzed separately
+by ``repro.analysis.roofline``; this module tracks the FL uplink a real
 client<->server deployment would pay.
 """
 from __future__ import annotations
@@ -16,13 +30,19 @@ class CommLedger:
     rounds: int = 0
     uplink_floats: float = 0.0
     vanilla_floats: float = 0.0
+    wire_bytes: float = 0.0
+    vanilla_wire_bytes: float = 0.0
     per_round: List[Dict[str, float]] = field(default_factory=list)
 
-    def record(self, uplink: float, vanilla: float):
+    def record(self, uplink: float, vanilla: float,
+               wire: float = 0.0, vanilla_wire: float = 0.0):
         self.rounds += 1
         self.uplink_floats += uplink
         self.vanilla_floats += vanilla
-        self.per_round.append({"uplink": uplink, "vanilla": vanilla})
+        self.wire_bytes += wire
+        self.vanilla_wire_bytes += vanilla_wire
+        self.per_round.append({"uplink": uplink, "vanilla": vanilla,
+                               "wire": wire, "vanilla_wire": vanilla_wire})
 
     @property
     def savings(self) -> float:
@@ -30,7 +50,16 @@ class CommLedger:
             return 0.0
         return 1.0 - self.uplink_floats / self.vanilla_floats
 
+    @property
+    def wire_savings(self) -> float:
+        if self.vanilla_wire_bytes == 0:
+            return 0.0
+        return 1.0 - self.wire_bytes / self.vanilla_wire_bytes
+
     def summary(self) -> Dict[str, float]:
         return {"rounds": self.rounds, "uplink_floats": self.uplink_floats,
                 "vanilla_floats": self.vanilla_floats,
-                "savings": self.savings}
+                "savings": self.savings,
+                "wire_bytes": self.wire_bytes,
+                "vanilla_wire_bytes": self.vanilla_wire_bytes,
+                "wire_savings": self.wire_savings}

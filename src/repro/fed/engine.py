@@ -129,6 +129,21 @@ declarative ``ExperimentSpec`` API builds on):
 Uplink accounting follows the paper's metric of floating-point parameters
 shared per worker: a scalar (recycle) round uploads exactly 1 float, a full
 round pays the pipeline/store cost.
+
+On top of that float count, the **wire codec** (``FLConfig.codec`` /
+``codec_kw`` — ``repro.comm.wire``) decides how those floats are encoded on
+the wire and accounts the real bytes: ``"none"`` ships fp32 (bit-for-bit
+the pre-codec histories), ``"delta_idx"`` varint-compresses the sparse
+payload indices, ``"int8"``/``"fp8"`` stochastically quantize the values
+with one power-of-two scale per block row. Encoding happens in
+``client_fn`` *after* the uplink pipeline (the bank stores the
+server-decodable values, so recycle rounds stay deployment-faithful);
+decoding happens at the aggregator seam — for quantized streaming
+aggregation the dequantize is fused into the scatter-accumulate
+(:class:`SparseCodecAggregator` -> ``kernels.ops.lbgm_dequant_accum``), so
+no fp32 payload stack is ever materialized. Per-client ``wire_bytes`` ride
+the scheduler outputs next to ``uplink`` and land in the
+:class:`~repro.comm.accounting.CommLedger` (savings vs vanilla fp32 dense).
 """
 from __future__ import annotations
 
@@ -143,6 +158,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.comm.accounting import CommLedger
+from repro.comm.wire import WIRE_KEY, codec_rng, make_codec
 from repro.compression import make_uplink_pipeline
 from repro.core import lbgm as lbgm_lib
 from repro.core.lbgm_sharded import (_SM_KW, _shard_map,
@@ -156,7 +172,10 @@ from repro.fed.flconfig import FLConfig  # noqa: F401  (re-export)
 from repro.fed.registry import (LBG_STORES, SCHEDULERS, register_lbg_store,
                                 register_scheduler)
 from repro.fed.robust import (CollectDenseAggregator,
-                              CollectSparseAggregator, make_robust_rule)
+                              CollectSparseAggregator,
+                              ScalarMedianSparseAggregator, make_robust_rule)
+from repro.kernels.ops import lbgm_dequant_accum
+from repro.kernels.ref import lbgm_dequant_accum_ref
 
 
 def resolve_fused_kernels(cfg: FLConfig) -> bool:
@@ -391,6 +410,8 @@ class SparseTopKAggregator:
     LBG values instead of after).
     """
 
+    payload_keys = ("idx", "val")
+
     def __init__(self, params, k_frac: float):
         self._layout = {
             name: (leaf.shape, int(leaf.size))
@@ -433,7 +454,35 @@ class SparseTopKAggregator:
                 for name, (shape, size, _, _) in self._layout.items()}
 
 
-def make_aggregator(cfg: FLConfig, store, params):
+class SparseCodecAggregator(SparseTopKAggregator):
+    """Streaming aggregation of QUANTIZED sparse payloads.
+
+    Same strictly sequential per-client fold, layout, and finalize as
+    :class:`SparseTopKAggregator`, but each client's payload arrives in
+    the wire layout ``{idx, val (int8/fp8), scale}`` and the dequantize
+    (widen + per-block-row scale multiply) happens *inside* the
+    accumulate: one ``kernels.ops.lbgm_dequant_accum`` Pallas pass per
+    leaf per chunk when ``fused=True``, the ``lbgm_dequant_accum_ref``
+    XLA scan otherwise (bit-identical op order — the interpreted kernel
+    is validated against exactly that oracle). Either way the fp32
+    (C, nb, kb) payload stack is never materialized — the values widen
+    on the fly as they scatter into the fp32 accumulator.
+    """
+
+    payload_keys = ("idx", "val", "scale")
+
+    def __init__(self, params, k_frac: float, fused: bool = False):
+        super().__init__(params, k_frac)
+        self._accum = lbgm_dequant_accum if fused else lbgm_dequant_accum_ref
+
+    def accumulate(self, acc, w, out):
+        send, gscale = out   # idx/val (C, nb, kb); scale (C, nb, 1)
+        return {name: self._accum(acc[name], w, gscale, sk["idx"],
+                                  sk["val"], sk["scale"])
+                for name, sk in send.items()}
+
+
+def make_aggregator(cfg: FLConfig, store, params, codec):
     """Resolve the round aggregation strategy for ``(cfg, store)``.
 
     Two orthogonal choices meet here. The *payload* (sparse vs dense):
@@ -448,16 +497,41 @@ def make_aggregator(cfg: FLConfig, store, params):
     folded one client at a time, so the per-client payload stacks (dense
     g_tilde or sparse (idx, val) + gscale) are collected across chunks
     and reduced once per round (see ``repro.fed.robust``).
+
+    The *codec* is the third axis: a lossy codec hands sparse payloads to
+    the fused dequant-accumulate (:class:`SparseCodecAggregator`) on the
+    streaming path, and hands the collect adapters its ``decode_leaf`` /
+    ``payload_keys`` so the robust rules see fp32 values again. The
+    ``scalar_median`` rule additionally demands the sparse payload
+    structure itself — it never densifies, so it has no dense fallback.
     """
     rule = make_robust_rule(cfg)
     sparse = (cfg.fused_kernels is not False
               and hasattr(store, "make_aggregator"))
+    if getattr(rule, "scalar_structured", False) and not sparse:
+        raise ValueError(
+            f"aggregator={cfg.aggregator!r} exploits the sparse "
+            "scalar-round payload structure and has no dense fallback — "
+            "use a top-k LBG store (lbg_variant='topk'/'topk-sharded') "
+            "and leave fused_kernels unset or True")
+    decode = codec.decode_leaf if codec.lossy else None
+    pk = codec.payload_keys
     if getattr(rule, "streaming", False):
         if sparse:
+            if codec.lossy:
+                return SparseCodecAggregator(
+                    params, store.k_frac,
+                    fused=resolve_fused_kernels(cfg)), True
             return store.make_aggregator(params), True
         return DenseAggregator(), False
+    if getattr(rule, "scalar_structured", False):
+        return ScalarMedianSparseAggregator(
+            rule, params, store.k_frac, decode=decode,
+            payload_keys=pk), True
     if sparse:
-        return CollectSparseAggregator(rule, params, store.k_frac), True
+        return CollectSparseAggregator(rule, params, store.k_frac,
+                                       decode=decode,
+                                       payload_keys=pk), True
     return CollectDenseAggregator(rule), False
 
 
@@ -513,7 +587,7 @@ class VmapScheduler:
         return stacked  # leaves stay (K, tau, b, ...)
 
     def run(self, client_fn, agg, params, batch, lbg, resid, w, maskf):
-        gt, new_lbg, new_res, loss, uplink, scalar = jax.vmap(
+        gt, new_lbg, new_res, loss, uplink, scalar, wire = jax.vmap(
             lambda b, l, r: client_fn(params, b, l, r))(batch, lbg, resid)
         if getattr(agg, "collect", False):
             # robust rules need the whole per-client stack at once — vmap
@@ -522,7 +596,8 @@ class VmapScheduler:
         else:
             out = agg.finalize(agg.accumulate(agg.init(params), w, gt))
         return (out, _keep_sampled(maskf, new_lbg, lbg),
-                _keep_sampled(maskf, new_res, resid), loss, uplink, scalar)
+                _keep_sampled(maskf, new_res, resid), loss, uplink, scalar,
+                wire)
 
 
 @register_scheduler("chunked")
@@ -575,16 +650,16 @@ class ChunkedScheduler:
             acc, lbg_bank, res_bank = carry
             i, b_c, w_c, m_c = xs
             l_c, r_c = slice_at(lbg_bank, i), slice_at(res_bank, i)
-            gt, nl, nr, loss, uplink, scalar = jax.vmap(
+            gt, nl, nr, loss, uplink, scalar, wire = jax.vmap(
                 lambda b, l, r: client_fn(params, b, l, r))(b_c, l_c, r_c)
             if collect:
                 # a robust rule cannot fold a median chunk-by-chunk: stack
                 # the raw per-client payloads as scan outputs instead
                 # (O(Kp·payload) — the documented collect-mode memory)
-                ys = (loss, uplink, scalar, gt)
+                ys = (loss, uplink, scalar, wire, gt)
             else:
                 acc = agg.accumulate(acc, w_c, gt)
-                ys = (loss, uplink, scalar)
+                ys = (loss, uplink, scalar, wire)
             lbg_bank = update_at(lbg_bank, _keep_sampled(m_c, nl, l_c), i)
             res_bank = update_at(res_bank, _keep_sampled(m_c, nr, r_c), i)
             return (acc, lbg_bank, res_bank), ys
@@ -595,14 +670,15 @@ class ChunkedScheduler:
             (jnp.arange(n_chunks), batch, w.reshape(n_chunks, chunk),
              maskf.reshape(n_chunks, chunk)))
         if collect:
-            loss, uplink, scalar, gt = ys
+            loss, uplink, scalar, wire, gt = ys
             out = agg.reduce(w, jax.tree.map(
                 lambda x: x.reshape((-1,) + x.shape[2:]), gt))
         else:
-            loss, uplink, scalar = ys
+            loss, uplink, scalar, wire = ys
             out = agg.finalize(acc)
         return (out, new_lbg, new_res, loss.reshape(Kp)[:K],
-                uplink.reshape(Kp)[:K], scalar.reshape(Kp)[:K])
+                uplink.reshape(Kp)[:K], scalar.reshape(Kp)[:K],
+                wire.reshape(Kp)[:K])
 
 
 def pick_sharded_chunk(num_clients: int, chunk_size: int, n_dev: int) -> int:
@@ -706,6 +782,20 @@ class ShardedScheduler(ChunkedScheduler):
             axes = (self.AXIS, self.MODEL_AXIS)
         return P(None, *axes) if chunk_leading else P(*axes)
 
+    def _payload_specs(self, agg, lbg):
+        """Collect-stack specs for the sparse payload leaves.
+
+        Same client/model placement as the bank rows the payload came
+        from, but with the codec's leaf structure (``agg.payload_keys``):
+        a quantized payload carries a per-block-row ``scale`` leaf the
+        bank does not have, so the bank's spec tree cannot be reused
+        verbatim when the bank model-shards."""
+        ms = self._msharded or {}
+        pk = getattr(agg, "payload_keys", ("idx", "val"))
+        spec = lambda name: (P(self.AXIS, self.MODEL_AXIS) if ms.get(name)
+                             else P(self.AXIS))
+        return {name: {k: spec(name) for k in pk} for name in lbg}
+
     # ------------------------------------------------------ bank placement
     def layout_banks(self, bank):
         """(Kp, ...) bank -> (n_chunks, chunk, ...), client axis sharded
@@ -750,20 +840,25 @@ class ShardedScheduler(ChunkedScheduler):
             # the bank's client/model placement; the weighted reduce runs
             # once per round on the global stack, outside shard_map)
             def local_chunk(p, b, l, r, w_c, m_c):
-                gt, nl, nr, loss, uplink, scalar = jax.vmap(
+                gt, nl, nr, loss, uplink, scalar, wire = jax.vmap(
                     lambda bb, ll, rr: client_fn(p, bb, ll, rr))(b, l, r)
                 return (gt, _keep_sampled(m_c, nl, l),
-                        _keep_sampled(m_c, nr, r), loss, uplink, scalar)
+                        _keep_sampled(m_c, nr, r), loss, uplink, scalar,
+                        wire)
 
-            gt_specs = (lbg_specs, cl) if getattr(agg, "sparse", False) \
-                else cl
+            if getattr(agg, "sparse", False):
+                gt_specs = ((self._payload_specs(agg, lbg) if ms else cl),
+                            cl)
+            else:
+                gt_specs = cl
             sharded_chunk = _shard_map(
                 local_chunk, mesh=self.mesh,
                 in_specs=(rep, cl, lbg_specs, cl, cl, cl),
-                out_specs=(gt_specs, lbg_specs, cl, cl, cl, cl), **_SM_KW)
+                out_specs=(gt_specs, lbg_specs, cl, cl, cl, cl, cl),
+                **_SM_KW)
         else:
             def local_chunk(acc, p, b, l, r, w_c, m_c):
-                gt, nl, nr, loss, uplink, scalar = jax.vmap(
+                gt, nl, nr, loss, uplink, scalar, wire = jax.vmap(
                     lambda bb, ll, rr: client_fn(p, bb, ll, rr))(b, l, r)
                 # client-device 0 seeds its local accumulation with the
                 # scan carry, so each chunk folds into the aggregate in the
@@ -777,12 +872,14 @@ class ShardedScheduler(ChunkedScheduler):
                 acc = jax.tree.map(lambda a: jnp.where(first, a, 0.0), acc)
                 acc = jax.lax.psum(agg.accumulate(acc, w_c, gt), ax)
                 return (acc, _keep_sampled(m_c, nl, l),
-                        _keep_sampled(m_c, nr, r), loss, uplink, scalar)
+                        _keep_sampled(m_c, nr, r), loss, uplink, scalar,
+                        wire)
 
             sharded_chunk = _shard_map(
                 local_chunk, mesh=self.mesh,
                 in_specs=(acc_specs, rep, cl, lbg_specs, cl, cl, cl),
-                out_specs=(acc_specs, lbg_specs, cl, cl, cl, cl), **_SM_KW)
+                out_specs=(acc_specs, lbg_specs, cl, cl, cl, cl, cl),
+                **_SM_KW)
 
         idx_at = lambda t, i: jax.tree.map(
             lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False),
@@ -796,13 +893,13 @@ class ShardedScheduler(ChunkedScheduler):
             i, b_c, w_c, m_c = xs
             l_c, r_c = idx_at(lbg_bank, i), idx_at(res_bank, i)
             if collect:
-                gt, nl, nr, loss, uplink, scalar = sharded_chunk(
+                gt, nl, nr, loss, uplink, scalar, wire = sharded_chunk(
                     params, b_c, l_c, r_c, w_c, m_c)
-                ys = (loss, uplink, scalar, gt)
+                ys = (loss, uplink, scalar, wire, gt)
             else:
-                acc, nl, nr, loss, uplink, scalar = sharded_chunk(
+                acc, nl, nr, loss, uplink, scalar, wire = sharded_chunk(
                     acc, params, b_c, l_c, r_c, w_c, m_c)
-                ys = (loss, uplink, scalar)
+                ys = (loss, uplink, scalar, wire)
             return ((acc, put_at(lbg_bank, nl, i), put_at(res_bank, nr, i)),
                     ys)
 
@@ -812,14 +909,15 @@ class ShardedScheduler(ChunkedScheduler):
             (jnp.arange(n_chunks), batch, w.reshape(n_chunks, chunk),
              maskf.reshape(n_chunks, chunk)))
         if collect:
-            loss, uplink, scalar, gt = ys
+            loss, uplink, scalar, wire, gt = ys
             out = agg.reduce(w, jax.tree.map(
                 lambda x: x.reshape((-1,) + x.shape[2:]), gt))
         else:
-            loss, uplink, scalar = ys
+            loss, uplink, scalar, wire = ys
             out = agg.finalize(acc)
         return (out, new_lbg, new_res, loss.reshape(Kp)[:K],
-                uplink.reshape(Kp)[:K], scalar.reshape(Kp)[:K])
+                uplink.reshape(Kp)[:K], scalar.reshape(Kp)[:K],
+                wire.reshape(Kp)[:K])
 
 
 def make_scheduler(cfg: FLConfig, num_clients: int):
@@ -892,10 +990,25 @@ class FLEngine:
             {k: v[off:off + n] for k, v in self._data_cat.items()}
             for off, n in zip(self._data_offsets, self._data_sizes)]
         self.store = make_lbg_store(flcfg)
+        # wire codec (repro.comm.wire): payload encoding + real-byte
+        # accounting. Its per-client seeds come from a dedicated stream —
+        # drawn only when the codec is stochastic, so codec="none" leaves
+        # the batch/mask rng (and every pre-codec history) untouched.
+        self.codec = make_codec(flcfg)
+        self._codec_rng = codec_rng(flcfg.seed)
         # aggregation strategy: sparse scalar-round scatter-add when the
         # store supports it and fused_kernels is not explicitly False
         self.agg, self._sparse_agg = make_aggregator(flcfg, self.store,
-                                                     params)
+                                                     params, self.codec)
+        if self.codec.lossy and not (
+                self._sparse_agg or isinstance(self.store, NullLBGStore)):
+            raise ValueError(
+                f"codec={flcfg.codec!r} is lossy, but the dense LBGM bank "
+                "cannot track the server-decoded values (recycle rounds "
+                "would replay unquantized LBGs the server never saw). Use "
+                "the sparse payload path (lbg_variant='topk'/'topk-sharded' "
+                "with fused_kernels not False) or vanilla FL "
+                "(use_lbgm=False)")
         # 2-D (clients, model) mesh: the scheduler decides — with the
         # store — which bank/aggregator leaves shard over the model axis,
         # BEFORE the banks are laid out below
@@ -945,13 +1058,26 @@ class FLEngine:
 
         sparse = self._sparse_agg
         attack = self._payload_attack
+        codec = self.codec
+        # the legacy dense-aggregation oracle over a top-k store ships the
+        # same conceptual (idx, val) payload as the sparse path, so its
+        # wire bytes come from the store's static block layout — the two
+        # paths must report identical histories (codec is lossless here:
+        # lossy codecs are rejected at __init__ without sparse agg)
+        sparse_wire = None
+        if not sparse and getattr(store, "k_frac", None) is not None:
+            sparse_wire = codec.sparse_layout_bytes(
+                [lbgm_lib._block_layout(int(p.size), store.k_frac)[::2]
+                 for p in self.params.values()])
 
         def client_fn(params, batches, lbg_k, resid_k):
-            # engine-reserved batch keys (Byzantine flag + per-round attack
-            # extras) ride the batch dict through every scheduler layout
-            # and the prefetcher; strip them before the local-SGD scan
+            # engine-reserved batch keys (Byzantine flag, per-round attack
+            # extras, per-client wire-codec seed) ride the batch dict
+            # through every scheduler layout and the prefetcher; strip
+            # them before the local-SGD scan
             batches = dict(batches)
             byz = batches.pop(BYZ_KEY, None)
+            wire_seed = batches.pop(WIRE_KEY, None)
             extras = {k: batches.pop(k) for k in list(batches)
                       if k.startswith("_atk_")}
             asg, loss = client_update(params, batches)
@@ -971,7 +1097,19 @@ class FLEngine:
             # scalar rounds upload 1 float; full rounds pay the base cost
             uplink = jnp.where(stats.sent_scalar, 1.0,
                                store.full_round_cost(cost, stats))
-            return gt, lbg_k, resid_k, loss, uplink, stats.sent_scalar
+            # wire codec: encode the payload the uplink actually ships
+            # (and, for lossy codecs, re-point the bank at the values the
+            # server will decode) + account the real bytes on the wire
+            if sparse:
+                gt, lbg_k, wire = codec.encode_sparse(gt, lbg_k, stats,
+                                                      wire_seed)
+            elif sparse_wire is not None:
+                wire = jnp.where(stats.sent_scalar, codec.scalar_bytes,
+                                 sparse_wire)
+            else:
+                gt, wire = codec.encode_dense(gt, uplink, wire_seed)
+            return (gt, lbg_k, resid_k, loss, uplink, stats.sent_scalar,
+                    wire)
 
         return client_fn
 
@@ -990,7 +1128,7 @@ class FLEngine:
             maskf = mask.astype(jnp.float32)
             w = self.weights * maskf
             w = w / jnp.maximum(jnp.sum(w), 1e-12)
-            agg, new_lbg, new_res, losses, uplink, scalar = sched.run(
+            agg, new_lbg, new_res, losses, uplink, scalar, wire = sched.run(
                 client_fn, aggregator, params, batch, lbg, residual, w,
                 maskf)
             new_params = jax.tree.map(
@@ -1000,6 +1138,7 @@ class FLEngine:
                 "uplink_floats": jnp.sum(uplink * maskf),
                 "frac_scalar": jnp.sum(scalar.astype(jnp.float32) * maskf)
                 / jnp.maximum(jnp.sum(maskf), 1.0),
+                "wire_bytes": jnp.sum(wire * maskf),
             }
             return new_params, new_lbg, new_res, metrics
 
@@ -1034,6 +1173,14 @@ class FLEngine:
             stacked[BYZ_KEY] = self._byz
             stacked.update(self._payload_attack.round_extras(
                 self._fault_rng, cfg.num_clients))
+        if self.codec.stochastic:
+            # per-client stochastic-rounding seeds from the dedicated
+            # codec stream (never the batch/mask rng): one uint32 per
+            # client per round, riding the batch layout like the fault
+            # keys above. Deterministic codecs draw nothing — the stream
+            # (and the prefetcher's behavior) is bit-for-bit unchanged.
+            stacked[WIRE_KEY] = self._codec_rng.randint(
+                0, 2 ** 31 - 1, size=cfg.num_clients).astype(np.uint32)
         stacked = self.sched.prepare_batch(stacked)
         return {k: jnp.asarray(v) for k, v in stacked.items()}
 
@@ -1100,11 +1247,16 @@ class FLEngine:
             self.params, self.lbg, self.residual, batch,
             jnp.asarray(mask, jnp.float32))
         m = {k: float(v) for k, v in metrics.items()}
-        self.ledger.record(m["uplink_floats"],
-                           float(mask.sum()) * tree_size(self.params))
+        vanilla = float(mask.sum()) * tree_size(self.params)
+        # vanilla wire = dense fp32, 4 bytes per param per participant —
+        # the baseline both the float and byte savings are measured from
+        self.ledger.record(m["uplink_floats"], vanilla,
+                           wire=m["wire_bytes"], vanilla_wire=4.0 * vanilla)
         m["total_uplink"] = self.ledger.uplink_floats
         m["vanilla_uplink"] = self.ledger.vanilla_floats
         m["savings"] = self.ledger.savings
+        m["total_wire_bytes"] = self.ledger.wire_bytes
+        m["wire_savings"] = self.ledger.wire_savings
         self.history.append(m)
         return m
 

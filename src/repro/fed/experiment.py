@@ -180,6 +180,15 @@ class ExperimentSpec:
 # ------------------------------------------------------------ result types
 
 
+#: history keys copied verbatim from ``FLEngine.run_round`` metrics into
+#: each :class:`RoundRecord` — must track the engine's history keys in
+#: lockstep (``result.history`` is asserted float-exact against
+#: ``FLEngine.history`` in tests/test_experiment.py)
+_HISTORY_KEYS = ("loss", "uplink_floats", "frac_scalar", "wire_bytes",
+                 "total_uplink", "vanilla_uplink", "savings",
+                 "total_wire_bytes", "wire_savings")
+
+
 @dataclass
 class RoundRecord:
     """One FL round's server-side metrics (mirrors ``FLEngine.history``)."""
@@ -190,14 +199,21 @@ class RoundRecord:
     total_uplink: float
     vanilla_uplink: float
     savings: float
+    # real-byte wire accounting (repro.comm.wire / FLConfig.codec)
+    wire_bytes: float = 0.0
+    total_wire_bytes: float = 0.0
+    wire_savings: float = 0.0
     eval: Dict[str, float] = field(default_factory=dict)
 
     def as_history_entry(self) -> Dict[str, float]:
         return {"loss": self.loss, "uplink_floats": self.uplink_floats,
                 "frac_scalar": self.frac_scalar,
+                "wire_bytes": self.wire_bytes,
                 "total_uplink": self.total_uplink,
                 "vanilla_uplink": self.vanilla_uplink,
-                "savings": self.savings}
+                "savings": self.savings,
+                "total_wire_bytes": self.total_wire_bytes,
+                "wire_savings": self.wire_savings}
 
 
 @dataclass
@@ -316,10 +332,7 @@ def run_experiment(spec: ExperimentSpec,
                           " ".join(f"{k}={v:.4g}"
                                    for k, v in shown.items()))
             records.append(RoundRecord(round=r + 1, eval=ev,
-                                       **{k: m[k] for k in
-                                          ("loss", "uplink_floats",
-                                           "frac_scalar", "total_uplink",
-                                           "vanilla_uplink", "savings")}))
+                                       **{k: m[k] for k in _HISTORY_KEYS}))
     finally:
         src.close()
     final_eval = eval_fn(engine.params) if policy.final else {}

@@ -88,6 +88,15 @@ class FLConfig:
     #   path: per-client dense g_tilde scatter + 3-pass XLA decision,
     #   bit-for-bit identical to pre-knob round histories. Plain
     #   Optional[bool], so specs stay JSON-able and round-trip losslessly.
+    codec: str = "none"              # registry key: none | delta_idx |
+    #   int8 | fp8 — the uplink wire codec (repro.comm.wire). "none"
+    #   (default) keeps the fp32 wire format and the pre-codec round
+    #   history bit-for-bit; delta_idx compresses the sparse index stream
+    #   losslessly; int8/fp8 stochastically quantize payload values and
+    #   the scalar-round rho stream. Every codec feeds the real-byte
+    #   ``wire_bytes`` ledger alongside the fp32-scalar counters.
+    codec_kw: Optional[dict] = None  # e.g. {"stochastic": False} to pin
+    #   nearest rounding for int8/fp8 (see repro.comm.wire)
 
     # ---------------------------------------------------------- validation
     def __post_init__(self):
@@ -146,7 +155,7 @@ class FLConfig:
         if self.attack is None and self.attack_frac > 0:
             bad(f"attack_frac={self.attack_frac} but attack=None — name an "
                 "attack (e.g. attack='sign_flip') or set attack_frac=0")
-        for kw_name in ("aggregator_kw", "attack_kw"):
+        for kw_name in ("aggregator_kw", "attack_kw", "codec_kw"):
             kw = getattr(self, kw_name)
             if kw is not None and not isinstance(kw, dict):
                 bad(f"{kw_name} must be a dict or None, got {kw!r}")
@@ -168,6 +177,9 @@ class FLConfig:
         if self.attack is not None and self.attack not in reg.ATTACKS:
             bad(f"unknown attack {self.attack!r}; registered "
                 f"attacks: {reg.ATTACKS.names()}")
+        if self.codec not in reg.CODECS:
+            bad(f"unknown codec {self.codec!r}; registered "
+                f"codecs: {reg.CODECS.names()}")
 
     # ------------------------------------------------------------- views
     @property

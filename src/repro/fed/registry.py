@@ -104,6 +104,7 @@ SCHEDULERS = Registry("scheduler", builtin_modules=("repro.fed.engine",))
 LBG_STORES = Registry("lbg_store", builtin_modules=("repro.fed.engine",))
 AGGREGATORS = Registry("aggregator", builtin_modules=("repro.fed.robust",))
 ATTACKS = Registry("attack", builtin_modules=("repro.fed.attacks",))
+CODECS = Registry("codec", builtin_modules=("repro.comm.wire",))
 
 register_model = MODELS.register
 register_dataset = DATASETS.register
@@ -113,3 +114,4 @@ register_scheduler = SCHEDULERS.register
 register_lbg_store = LBG_STORES.register
 register_aggregator = AGGREGATORS.register
 register_attack = ATTACKS.register
+register_codec = CODECS.register

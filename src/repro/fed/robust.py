@@ -148,6 +148,42 @@ class CoordinateMedian:
         return jax.tree.map(f, g)
 
 
+class ScalarMedian:
+    """O(K) robust rule exploiting the scalar-round payload structure.
+
+    On a recycle round each client's whole update is ``rho_k * bank_k`` —
+    one scalar of freedom per client. The generic robust rules ignore
+    that structure: they densify every payload to the (K, nb, block)
+    stack (O(K·M) peak) and run a coordinate-wise estimate. This rule
+    instead takes the *weighted median of the K gscale scalars* (rho on a
+    recycle round, exactly 1 on a full round — O(K log K) work on a (K,)
+    vector) and folds the payloads with that single clipped multiplier:
+
+        out = sum_k w_k * median(gscale) * payload_k
+
+    so a Byzantine client cannot inflate its scalar-round contribution by
+    lying about rho, while the fold itself stays the streaming-shaped
+    O(K·k_frac·M) scatter-add — the stacks the schedulers collect are the
+    raw sparse (idx, val) payloads, never densified
+    (:class:`ScalarMedianSparseAggregator`). On full rounds every gscale
+    is 1, the median is 1, and the rule degrades to the weighted mean.
+
+    On rank-1 payload stacks (all clients sharing one bank direction)
+    the geometric median of ``{rho_k * l}`` is exactly
+    ``wmedian(rho) * l`` — the tolerance cross-check in the tests.
+    """
+
+    scalar_structured = True
+
+    def median(self, w, gscale):
+        """Weighted median of the per-client gscale scalars."""
+        wf = w.astype(jnp.float32)
+        gs = jnp.where(wf > 0, gscale.astype(jnp.float32), 0.0)
+        v, _, cum = _sorted_with_weights(wf, gs)
+        half = 0.5 * jnp.sum(wf)
+        return v[jnp.argmax(cum >= half)]
+
+
 class GeometricMedian:
     """Smoothed Weiszfeld geometric median over whole update vectors.
 
@@ -230,8 +266,15 @@ class CollectSparseAggregator:
     collect = True
     sparse = True
 
-    def __init__(self, rule, params, k_frac: float):
+    def __init__(self, rule, params, k_frac: float, decode=None,
+                 payload_keys=("idx", "val")):
         self.rule = rule
+        # wire-codec seam: quantized payloads carry {idx, val, scale}
+        # leaves with wire-dtype values; ``decode`` widens them back to
+        # fp32 (None = the values are fp32 already). payload_keys tells
+        # the sharded scheduler the collect-stack leaf structure.
+        self.decode = decode or (lambda sk: sk["val"])
+        self.payload_keys = tuple(payload_keys)
         self._layout = {
             name: (leaf.shape, int(leaf.size))
             + _block_layout(int(leaf.size), k_frac)[:2]
@@ -242,17 +285,67 @@ class CollectSparseAggregator:
 
         def densify(name, sk):
             _, _, nb, block = self._layout[name]
+            vals = self.decode(sk).astype(jnp.float32)
 
             def one(idx, val, s):
                 dense = jnp.zeros((nb, block), jnp.float32)
                 return jnp.put_along_axis(dense, idx, s * val, axis=1,
                                           inplace=False)
-            return jax.vmap(one)(sk["idx"], sk["val"],
+            return jax.vmap(one)(sk["idx"], vals,
                                  gscale.astype(jnp.float32))
 
         stacks = {name: densify(name, sk) for name, sk in send.items()}
         red = self.rule.reduce(w, stacks)
         return {name: red[name].reshape(-1)[:size].reshape(shape)
+                for name, (shape, size, _, _) in self._layout.items()}
+
+
+class ScalarMedianSparseAggregator:
+    """Collect adapter for :class:`ScalarMedian` — O(K·k_frac·M) peak.
+
+    The schedulers still stack the per-client payloads (collect mode),
+    but the stacks stay in the sparse (idx, val[, scale]) wire layout:
+    the rule's weighted median runs on the (K,) gscale vector alone, and
+    the fold is the same strictly sequential gather-modify-scatter as the
+    streaming :class:`~repro.fed.engine.SparseTopKAggregator` with
+    ``gscale_k`` replaced by the one median — never a (K, nb, block)
+    densified stack.
+    """
+
+    collect = True
+    sparse = True
+
+    def __init__(self, rule, params, k_frac: float, decode=None,
+                 payload_keys=("idx", "val")):
+        self.rule = rule
+        self.decode = decode or (lambda sk: sk["val"])
+        self.payload_keys = tuple(payload_keys)
+        self._layout = {
+            name: (leaf.shape, int(leaf.size))
+            + _block_layout(int(leaf.size), k_frac)[:2]
+            for name, leaf in params.items()}
+
+    def reduce(self, w, out):
+        send, gscale = out  # leaves (K, nb, kb); gscale (K,)
+        med = self.rule.median(w, gscale)
+        acc = {name: jnp.zeros((nb, block), jnp.float32)
+               for name, (_, _, nb, block) in self._layout.items()}
+
+        def body(a, x):
+            w_k, send_k = x
+            coeff = w_k * med
+
+            def upd(ai, sk):
+                rows = jnp.arange(ai.shape[0])[:, None]
+                val = self.decode(sk).astype(jnp.float32)
+                cur = ai[rows, sk["idx"]]
+                new = cur + jnp.where(w_k > 0, coeff * val, 0.0)
+                return ai.at[rows, sk["idx"]].set(new)
+
+            return {name: upd(a[name], send_k[name]) for name in a}, None
+
+        acc, _ = jax.lax.scan(body, acc, (w, send))
+        return {name: acc[name].reshape(-1)[:size].reshape(shape)
                 for name, (shape, size, _, _) in self._layout.items()}
 
 
@@ -265,6 +358,8 @@ register_aggregator("coordinate_median", aliases=("median",))(
     lambda cfg: CoordinateMedian(**(cfg.aggregator_kw or {})))
 register_aggregator("geometric_median", aliases=("gm",))(
     lambda cfg: GeometricMedian(**(cfg.aggregator_kw or {})))
+register_aggregator("scalar_median")(
+    lambda cfg: ScalarMedian(**(cfg.aggregator_kw or {})))
 
 
 def make_robust_rule(cfg):

@@ -21,6 +21,17 @@ the LBGM banks/decision sharded 4 ways along the model axis (an int
 mesh ``n`` is exactly ``[n, 1]``; force host devices with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU). See
 ``examples/specs/yi34b_mesh2x4.json`` for a full 2-D large-arch spec.
+
+The uplink wire codec rides the same knobs: ``--set fl.codec=int8``
+(or ``fp8`` / ``delta_idx``) quantizes the sparse LBGM payloads to ~1
+byte/value with per-block-row power-of-two scales and varint-delta
+indices — needs the sparse payload path (``fl.lbg_variant=topk`` or
+``topk-sharded``) or vanilla FL (``fl.use_lbgm=false``); ``--set
+"fl.codec_kw={\"stochastic\": false}"`` switches to nearest rounding.
+``codec=none`` (default) ships fp32 bit-for-bit. Real bytes land in the
+history as ``wire_bytes`` / ``wire_savings`` (see ``repro.comm.wire``
+for the wire format); ``examples/specs/quantized_lbgm.json`` is a full
+int8 LBGM spec.
 """
 from __future__ import annotations
 
@@ -98,6 +109,8 @@ def main(argv: Optional[list] = None) -> int:
     print(f"  loss={last.loss:.4f} frac_scalar={last.frac_scalar:.2f} "
           f"uplink={result.total_uplink:.3g} floats "
           f"savings={result.savings:.1%}")
+    print(f"  wire={last.total_wire_bytes:.3g} bytes "
+          f"(codec={spec.fl.codec}) wire_savings={last.wire_savings:.1%}")
     if result.final_eval:
         print("  " + " ".join(f"{k}={v:.4f}"
                               for k, v in sorted(result.final_eval.items())))

@@ -279,3 +279,85 @@ def lbgm_sparse_decision_two_pass_pallas(blocks: jax.Array, idx: jax.Array,
     gg, gath, ti, tv = lbgm_sparse_decision_two_pass_batched_pallas(
         blocks[None], idx[None], interpret=interpret)
     return gg[0], gath[0], ti[0], tv[0]
+
+
+# ------------------------------------------ fused dequant + accumulate
+
+def _dequant_accum_kernel(w_ref, gs_ref, idx_ref, qv_ref, sc_ref, acc_ref,
+                          out_ref):
+    """One (nb,) grid step folds all C clients' quantized payload rows
+    into one accumulator block row.
+
+    The payload values arrive in their WIRE dtype (int8 / fp8) and are
+    widened client-by-client inside the kernel — the fused fast path
+    never materializes an fp32 (C, nb, kb) payload buffer. The fold is a
+    strictly sequential fori_loop (same client order as the XLA scan
+    path) of gather-modify-scatter updates: coeff = (w * gscale) * scale
+    is folded before the multiply with the quantized values, exactly the
+    :func:`repro.kernels.ref.lbgm_dequant_accum_ref` op order, so the
+    interpret-mode kernel is bit-identical to the oracle. The ``w > 0``
+    gate keeps phantom pad clients' NaN payloads out of the aggregate
+    (fp8 NaN widens to fp32 NaN — multiplying by a zero coeff is not
+    enough).
+
+    Mosaic caveat (same as the default decision kernel): the body uses
+    ``take_along_axis``/``put_along_axis``; validated in interpret mode,
+    structural one-HBM-pass win on TPU.
+    """
+    row = acc_ref[...].reshape(1, -1)                   # (1, block)
+    C = qv_ref.shape[0]
+
+    def fold(c, r):
+        wc = w_ref[c, 0]
+        coeff = (wc * gs_ref[c, 0]) * sc_ref[c, 0, 0]
+        q = qv_ref[c].reshape(1, -1).astype(jnp.float32)  # (1, kb)
+        ix = idx_ref[c].reshape(1, -1)
+        cur = jnp.take_along_axis(r, ix, axis=1)
+        new = cur + jnp.where(wc > 0, coeff * q, 0.0)
+        return jnp.put_along_axis(r, ix, new, axis=1, inplace=False)
+
+    out_ref[...] = jax.lax.fori_loop(0, C, fold, row).reshape(
+        out_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lbgm_dequant_accum_pallas(acc: jax.Array, w: jax.Array,
+                              gscale: jax.Array, idx: jax.Array,
+                              qv: jax.Array, scale: jax.Array,
+                              interpret: Optional[bool] = None):
+    """Fused dequantize + scatter-accumulate for one quantized sparse leaf.
+
+    acc: (nb, block) f32 accumulator; w, gscale: (C,) client weights and
+    scalar-round multipliers; idx: (C, nb, kb) int32 block-local
+    positions; qv: (C, nb, kb) wire-dtype quantized values; scale:
+    (C, nb, 1) f32 per-block-row dequantization scales. Returns
+    ``acc + sum_c [w_c > 0] (w_c * gscale_c * scale_c) * f32(qv_c)``
+    scattered at ``idx_c``, clients folded in order. The accumulator
+    input buffer is donated (``input_output_aliases``) — the carry is
+    updated in place across the round's chunk scan.
+    """
+    if interpret is None:
+        from repro.kernels.ops import _default_interpret
+        interpret = _default_interpret()
+    assert idx.ndim == 3 and qv.shape == idx.shape
+    C, nb, kb = idx.shape
+    assert acc.shape[0] == nb and scale.shape == (C, nb, 1)
+    block = acc.shape[1]
+    w2 = w.reshape(C, 1).astype(jnp.float32)
+    gs2 = gscale.reshape(C, 1).astype(jnp.float32)
+    return pl.pallas_call(
+        _dequant_accum_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((C, 1), lambda j: (0, 0)),
+            pl.BlockSpec((C, 1), lambda j: (0, 0)),
+            pl.BlockSpec((C, 1, kb), lambda j: (0, j, 0)),
+            pl.BlockSpec((C, 1, kb), lambda j: (0, j, 0)),
+            pl.BlockSpec((C, 1, 1), lambda j: (0, j, 0)),
+            pl.BlockSpec((1, block), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        input_output_aliases={5: 0},
+        interpret=interpret,
+    )(w2, gs2, idx, qv, scale, acc)

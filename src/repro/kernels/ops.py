@@ -26,7 +26,8 @@ from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.lbgm_projection import (lbgm_projection_batched_pallas,
                                            lbgm_projection_pallas)
 from repro.kernels.lbgm_sparse import (
-    lbgm_sparse_decision_batched_pallas, lbgm_sparse_decision_pallas,
+    lbgm_dequant_accum_pallas, lbgm_sparse_decision_batched_pallas,
+    lbgm_sparse_decision_pallas,
     lbgm_sparse_decision_two_pass_batched_pallas,
     lbgm_sparse_decision_two_pass_pallas)
 from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
@@ -122,6 +123,18 @@ def lbgm_sparse_decision(blocks, idx, interpret=None, two_pass=None):
     interpret = _default_interpret() if interpret is None else interpret
     two_pass = _default_two_pass() if two_pass is None else two_pass
     return _sparse_decision(bool(interpret), bool(two_pass))(blocks, idx)
+
+
+def lbgm_dequant_accum(acc, w, gscale, idx, qv, scale, interpret=None):
+    """Fused dequantize + scatter-accumulate of C clients' quantized
+    sparse payload rows into a (nb, block) accumulator leaf (see
+    ``kernels/lbgm_sparse.py``). The wire-dtype (int8/fp8) values widen
+    inside the kernel — no fp32 (C, nb, kb) payload buffer. Called once
+    per leaf per chunk by the engine's quantized sparse aggregator; no
+    vmap routing needed (the client axis is an explicit argument)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return lbgm_dequant_accum_pallas(acc, w, gscale, idx, qv, scale,
+                                     interpret=bool(interpret))
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, interpret=None):

@@ -26,6 +26,32 @@ def lbgm_sparse_decision_ref(blocks: jax.Array, idx: jax.Array):
     return gg, gathered, ti.astype(jnp.int32), tv
 
 
+def lbgm_dequant_accum_ref(acc: jax.Array, w: jax.Array, gscale: jax.Array,
+                           idx: jax.Array, qv: jax.Array, scale: jax.Array):
+    """Sequential dequantize + scatter-accumulate (the fused kernel's
+    oracle, and the engine's XLA fallback for quantized payloads).
+
+    acc: (nb, block) f32; w, gscale: (C,); idx: (C, nb, kb) int32; qv:
+    (C, nb, kb) wire-dtype values; scale: (C, nb, 1) f32 row scales.
+    Gather-modify-scatter with ``coeff = (w * gscale) * scale`` folded
+    before the multiply with the widened values — the same op order as
+    the kernel, and the same ``a + where(w > 0, c * v, 0)`` shape as
+    ``SparseTopKAggregator`` so full-round aggregates stay bit-equal to
+    the unquantized path when the values are on the fp32 grid already.
+    """
+    def body(a, x):
+        w_k, g_k, i_k, q_k, s_k = x
+        rows = jnp.arange(a.shape[0])[:, None]
+        coeff = (w_k * g_k) * s_k                        # (nb, 1)
+        cur = a[rows, i_k]
+        new = cur + jnp.where(w_k > 0,
+                              coeff * q_k.astype(jnp.float32), 0.0)
+        return a.at[rows, i_k].set(new), None
+
+    out, _ = jax.lax.scan(body, acc, (w, gscale, idx, qv, scale))
+    return out
+
+
 def sort_topk_rows(idx: jax.Array, val: jax.Array):
     """Canonicalize a block-row top-k (idx, val) pair by ascending index.
 
