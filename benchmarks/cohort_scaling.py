@@ -23,10 +23,18 @@ The ``mesh_shapes`` section is the ISSUE-5 acceptance measurement: the
 same scalar-heavy experiment across 2-D ``(clients, model)`` mesh shapes
 — every factorization of the local device count — so BENCH_engine.json
 records how the round time moves as the client axis trades devices with
-the model axis. Every row emitted by this module carries
-``mesh``/``mesh_shape``/``fused_kernels`` metadata (``common.
-spec_metadata``) so rows from different PRs are attributable to the
-execution path that produced them.
+the model axis.
+
+The ``lm_model_sharding`` section is the ISSUE-8 acceptance measurement:
+the ``"lm"`` component on one ``model > 1`` mesh shape under
+``model_sharding="replicate"`` vs ``"auto"`` (client compute replicated
+vs tensor-parallel along the model axis), reporting us/round and the
+XLA-reported per-device temp bytes of the whole round.
+
+Every row emitted by this module carries
+``mesh``/``mesh_shape``/``fused_kernels``/``model_sharding`` metadata
+(``common.spec_metadata``) so rows from different PRs are attributable
+to the execution path that produced them.
 """
 from __future__ import annotations
 
@@ -71,6 +79,7 @@ def run(rounds: int = 3, cohorts=(32, 128), chunk_size: int = 8,
     for K in mesh_cohorts:
         mesh_shape_sweep(K, scalar_chunk, scalar_rounds, scalar_warmup,
                          scalar_d_model, n_dev, k_frac=scalar_k_frac)
+    lm_model_sharding_comparison(scalar_rounds, scalar_warmup, n_dev)
 
 
 def mesh_shape_sweep(K: int, chunk_size: int, rounds: int, warmup: int,
@@ -102,6 +111,84 @@ def mesh_shape_sweep(K: int, chunk_size: int, rounds: int, warmup: int,
              f"n_dev={n_dev} mesh=({c},{m})",
              K=K, d_model=d_model, k_frac=k_frac, n_dev=n_dev,
              **spec_metadata(spec))
+
+
+def lm_model_sharding_comparison(rounds: int, warmup: int, n_dev: int,
+                                 K: int = 8, chunk: int = 4) -> None:
+    """replicate-vs-auto ``model_sharding`` on the ``"lm"`` component: the
+    same 2-D mesh either replicates each client's local-SGD
+    forward/backward along the model axis (``"replicate"`` — only banks /
+    decision / aggregation shard, the pre-tensor-parallel behaviour) or
+    runs it model-sharded (``"auto"``). Emits us/round plus the
+    XLA-reported whole-round temp bytes per device, so BENCH_engine.json
+    records what the TP path buys in working-set memory and costs in
+    wall-clock (on CPU hosts expect auto slower: the model axis buys
+    memory, not flops).
+    """
+    import numpy as np
+
+    from repro.fed import (ComponentSpec, EvalPolicy, ExperimentSpec,
+                           FLConfig)
+    from repro.fed.experiment import build_experiment
+
+    shapes = [s for s in _mesh_factorizations(n_dev) if s[1] > 1]
+    if not shapes:
+        return  # single device: no model axis to compare over
+    c, m = next((s for s in shapes if s[0] > 1), shapes[0])
+    vocab = 512
+    for ms in ("replicate", "auto"):
+        spec = ExperimentSpec(
+            name=f"lm-msharding-{ms}-{c}x{m}",
+            model=ComponentSpec("lm", {"arch": "qwen3-1.7b",
+                                       "reduced": True,
+                                       "vocab_size": vocab}),
+            data=ComponentSpec("markov", {"n": 16 * K, "n_eval": 0,
+                                          "seq_len": 16, "vocab": vocab}),
+            partition=ComponentSpec("iid", {}),
+            fl=FLConfig(num_clients=K, tau=1, lr=0.02, batch_size=4,
+                        use_lbgm=True, delta_threshold=1.0,
+                        seed=0, scheduler="sharded",
+                        chunk_size=max(chunk, c), mesh=[c, m],
+                        lbg_variant="topk-sharded",
+                        lbg_kw={"k_frac": 0.01}, model_sharding=ms),
+            eval=EvalPolicy(every=0, final=False))
+        engine, _ = build_experiment(spec)
+        rng = np.random.RandomState(spec.fl.seed + 1)
+        src = engine.prefetcher(rng)
+        try:
+            for _ in range(warmup):
+                engine.run_round(src)
+            t0 = time.time()
+            for _ in range(rounds):
+                engine.run_round(src)
+            elapsed = time.time() - t0
+        finally:
+            src.close()
+        us = elapsed / max(rounds, 1) * 1e6
+        tmp = _round_temp_bytes(engine)
+        per_dev = tmp // n_dev if tmp is not None else None
+        emit(f"cohort_scaling/lm_model_sharding/{ms}/{c}x{m}", us,
+             f"temp_bytes_per_dev={per_dev} vocab={vocab} tau=1 "
+             f"n_dev={n_dev} mesh=({c},{m})",
+             K=K, n_dev=n_dev, temp_bytes_per_dev=per_dev,
+             **spec_metadata(spec))
+
+
+def _round_temp_bytes(engine):
+    """XLA whole-round temp allocation (memory_analysis; None when the
+    backend does not report it) — lowered on the live arrays so banks and
+    params keep their mesh placements."""
+    import numpy as np
+    import jax.numpy as jnp
+
+    batch = engine._sample_batches(np.random.RandomState(0))
+    mask = jnp.ones(engine.cfg.num_clients, jnp.float32)
+    lowered = engine._round.lower(engine.params, engine.lbg,
+                                  engine.residual, batch, mask)
+    stats = lowered.compile().memory_analysis()
+    if stats is None or not hasattr(stats, "temp_size_in_bytes"):
+        return None
+    return int(stats.temp_size_in_bytes)
 
 
 def _time_scalar_rounds(spec, rounds: int, warmup: int) -> float:

@@ -81,6 +81,7 @@ def spec_metadata(spec) -> Dict[str, Any]:
         "kernel_variant": ("two_pass_topk" if _default_two_pass()
                           else "one_pass_topk"),
         "scheduler": fl.scheduler,
+        "model_sharding": fl.model_sharding,
         "codec": fl.codec,
         "codec_kw": fl.codec_kw,
     }

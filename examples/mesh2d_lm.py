@@ -25,6 +25,17 @@ or through the CLI on the same spec:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
         python -m repro.fed.run --spec examples/specs/yi34b_mesh2x4.json
+
+``fl.model_sharding="auto"`` goes one step further: the client
+forward/backward itself runs tensor-parallel along the model axis
+(the "lm" component hands the engine its arch's named-axis tree, and
+the sharded scheduler resolves it into per-leaf PartitionSpecs).
+``examples/specs/yi34b_tp2x4.json`` runs the FULL 60-layer yi-34b
+depth — width-reduced so a CPU container can hold it — on the same
+2x4 mesh:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.fed.run --spec examples/specs/yi34b_tp2x4.json
 """
 import os
 

@@ -146,7 +146,8 @@ def bank_model_partition(params_like, k_frac: float,
 
 def make_mesh_topk_step(delta: float, k_frac: float, *, n_model: int,
                         model_axis: str = "model", sparse_out: bool = True,
-                        fused: bool = False):
+                        fused: bool = False, pre_blocked: bool = False,
+                        layouts: Dict[str, Tuple[int, int, int]] = None):
     """Per-client Algorithm-1 decision body for the engine's 2-D
     ``(clients, model)`` mesh: ``fn(grads, lbg) -> ((send, gscale),
     new_lbg, stats)``.
@@ -172,8 +173,29 @@ def make_mesh_topk_step(delta: float, k_frac: float, *, n_model: int,
     accounting. Only ``sparse_out=True`` is supported for ``n_model > 1``
     (the dense g_tilde scatter would need a cross-rank leaf assembly; the
     engine's sparse aggregation contract never materializes it).
+
+    ``pre_blocked=True`` is the ``model_sharding="auto"`` entry point: the
+    caller (the scheduler's inner manual-over-``model`` region) hands each
+    leaf ALREADY in block-row layout, pre-sliced to this rank's rows for
+    sharded leaves (full rows for replicated ones) — tensor-parallel
+    gradients re-lay out once at the nested shard_map boundary instead of
+    replicate-then-slice. ``layouts`` must then carry the GLOBAL
+    ``name -> (nb, block, kb)`` layout (the local row count no longer
+    determines it), and the step runs even at ``n_model == 1`` (the psums
+    collapse to identities) so the auto path has one body on every mesh.
     """
-    if n_model == 1:
+    if pre_blocked:
+        if layouts is None:
+            raise ValueError(
+                "make_mesh_topk_step: pre_blocked=True needs the global "
+                "`layouts` {name: (nb, block, kb)} — local rows cannot "
+                "reconstruct the mesh-independent block layout")
+        if not sparse_out:
+            raise ValueError(
+                "make_mesh_topk_step: pre_blocked=True requires "
+                "sparse_out=True (block-row inputs have no dense g_tilde "
+                "layout to scatter back into)")
+    elif n_model == 1:
         return make_local_topk_step(delta, k_frac, sparse_out=sparse_out,
                                     fused=fused)
     if not sparse_out:
@@ -193,16 +215,25 @@ def make_mesh_topk_step(delta: float, k_frac: float, *, n_model: int,
         total_k = 0    # GLOBAL kept-entry count: mesh-independent uplink
         for name, g in grads.items():
             sl = lbg[name]
-            nb, block, kb = _block_layout(g.size, k_frac)
+            if pre_blocked:
+                nb, block, kb = layouts[name]
+            else:
+                nb, block, kb = _block_layout(g.size, k_frac)
             total_k += nb * kb
             nb_l = sl["idx"].shape[0]
             sharded = nb_l != nb
             assert nb_l == (nb // n_model if sharded else nb), (
                 name, nb_l, nb, n_model)
-            bl = _to_blocks(g, nb, block)
-            if sharded:
-                bl = jax.lax.dynamic_slice_in_dim(bl, rank * nb_l, nb_l,
-                                                  axis=0)
+            if pre_blocked:
+                # block rows arrive from the nested shard_map boundary —
+                # the caller's in_specs already handed this rank its slice
+                assert g.shape == (nb_l, block), (name, g.shape, nb_l, block)
+                bl = g
+            else:
+                bl = _to_blocks(g, nb, block)
+                if sharded:
+                    bl = jax.lax.dynamic_slice_in_dim(bl, rank * nb_l, nb_l,
+                                                      axis=0)
             if fused:
                 gg_leaf, gv, ti, tv = lbgm_sparse_decision(bl, sl["idx"])
                 local[name] = (ti, tv)

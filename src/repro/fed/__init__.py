@@ -45,8 +45,6 @@ _EXPORTS = {
     # data partitioning
     "partition_iid": "repro.fed.partition",
     "partition_label_skew": "repro.fed.partition",
-    # deprecated alias
-    "FLSystem": "repro.fed.runtime",
 }
 
 __all__ = sorted(_EXPORTS)

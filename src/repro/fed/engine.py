@@ -1,8 +1,8 @@
 """Unified federated execution engine (paper Algorithms 1 & 3).
 
 ``FLEngine`` is the single round-runner behind every FL reproduction in this
-repo (Figs. 5-8 benchmarks, the plug-and-play example, and the legacy
-``FLSystem`` shim in ``repro.fed.runtime``). One jit'd round function is
+repo (Figs. 5-8 benchmarks and the plug-and-play example). One jit'd round
+function is
 assembled from three pluggable pieces, each resolved by string key through
 the registries in ``repro.fed.registry`` (the extension seam the
 declarative ``ExperimentSpec`` API builds on):
@@ -326,6 +326,18 @@ class ShardedTopKLBGStore(TopKLBGStore):
 
     def sparse_client_step(self, grad, lbg_k):
         return self._sparse_step(grad, lbg_k)
+
+    def blocked_sparse_step(self, layouts):
+        """Decision step for ``model_sharding="auto"``: gradients arrive
+        already in block-row layout, pre-sliced to the calling model
+        rank's rows (the scheduler's nested shard_map boundary does the
+        TP-layout -> block-row reshard once). ``layouts`` is the global
+        ``name -> (nb, block, kb)`` tree; the decision math, psums, and
+        uplink accounting are exactly ``sparse_client_step``'s."""
+        return make_mesh_topk_step(
+            self.delta, self.k_frac, n_model=self.n_model,
+            model_axis=self.model_axis, sparse_out=True, fused=self.fused,
+            pre_blocked=True, layouts=layouts)
 
     def bank_model_partition(self, params) -> Dict[str, bool]:
         """name -> whether that leaf's bank block rows shard over the
@@ -754,6 +766,14 @@ class ShardedScheduler(ChunkedScheduler):
         # aggregator carry; None = everything model-replicated (the 1-D
         # client-mesh behavior)
         self._msharded: Optional[Dict[str, bool]] = None
+        # set by bind_model_axes (model_sharding="auto"): per-leaf param
+        # PartitionSpecs resolved from the model component's logical axes,
+        # the matching NamedShardings (the engine places/keeps params with
+        # them), and the global name -> (nb, block, kb) block layouts the
+        # auto chunk body reshapes gradients into. None = "replicate".
+        self._auto_specs: Optional[Dict[str, P]] = None
+        self._layouts = None
+        self.param_shardings: Optional[Dict[str, NamedSharding]] = None
 
     # ----------------------------------------------------- model binding
     def configure_store(self, store, sparse_agg: bool, params) -> None:
@@ -770,6 +790,58 @@ class ShardedScheduler(ChunkedScheduler):
         if (self.n_model > 1 and sparse_agg
                 and hasattr(store, "bank_model_partition")):
             self._msharded = store.bank_model_partition(params)
+
+    def bind_model_axes(self, axes_tree, params, layouts) -> None:
+        """Switch this scheduler into ``model_sharding="auto"``.
+
+        ``axes_tree`` is the model component's logical-axis pytree (the
+        ``train.sharding.params_shardings`` input — e.g. ``("embed",
+        "heads")``); it is resolved against this mesh into per-leaf
+        ``PartitionSpec``s with ``param_pspec`` in "replicated" mode (the
+        FL mesh has no fsdp "data" axis — only the model-parallel axes
+        shard, and only where the mesh extent divides). ``layouts`` is the
+        engine-computed global ``name -> (nb, block, kb)`` block layout
+        the auto chunk body (and the store's ``blocked_sparse_step``)
+        share, so the gradient reshape and the decision slicing agree by
+        construction.
+
+        Leaves with a ``vocab`` logical axis (embedding table, lm_head)
+        are sharded along their ``embed`` (d_model) dim instead of vocab:
+        vocab sharding makes the token lookup and the CE label pick
+        gathers *along the sharded dim*, whose backward is a scatter the
+        SPMD partitioner refuses to split inside a partial-auto region
+        (``Check failed: sharding.IsManualSubgroup``). d_model sharding
+        keeps those gathers device-local — the only collective left is
+        the contraction psum GSPMD inserts.
+        """
+        from repro.train.sharding import param_pspec
+        missing = sorted(set(params) - set(axes_tree))
+        if missing:
+            raise ValueError(
+                f"model_sharding='auto': the model component's axes tree "
+                f"is missing leaves {missing} — every param leaf needs a "
+                "logical-axis tuple (see train.sharding.params_shardings)")
+        m = self.mesh.shape.get(self.MODEL_AXIS, 1)
+
+        def leaf_spec(name):
+            axes = tuple(axes_tree[name])
+            shape = params[name].shape
+            if "vocab" in axes:
+                out, used = [], False
+                for logical, dim in zip(axes, shape):
+                    if logical == "embed" and not used and dim % m == 0:
+                        out.append(self.MODEL_AXIS)
+                        used = True
+                    else:
+                        out.append(None)
+                return P(*out)
+            return param_pspec(axes, shape, "replicated", self.mesh)
+
+        self._auto_specs = {name: leaf_spec(name) for name in params}
+        self._layouts = layouts
+        self.param_shardings = {
+            name: NamedSharding(self.mesh, spec)
+            for name, spec in self._auto_specs.items()}
 
     def _bank_leaf_spec(self, path, chunk_leading: bool):
         """PartitionSpec for one bank leaf; ``path`` is the jax key path
@@ -832,8 +904,75 @@ class ShardedScheduler(ChunkedScheduler):
         acc_specs = {name: P(self.MODEL_AXIS) if on else rep
                      for name, on in ms.items()} if ms else rep
 
+        auto = self._auto_specs is not None
+        if auto:
+            # model_sharding="auto": the per-chunk client compute runs as
+            # plain GSPMD — no enclosing shard_map — with the params
+            # constrained to the component's resolved tensor-parallel
+            # specs and the batch constrained along `clients`, so the
+            # vmapped local-SGD forward/backward partitions over the full
+            # 2-D mesh. (An enclosing partial-auto shard_map is NOT an
+            # option: `lax.scan` bodies — the layer stack, tau local-SGD,
+            # chunked CE — trip the SPMD partitioner's manual-subgroup
+            # checks, as do top_k/scatter.) The Algorithm-1 decision +
+            # aggregation then run in ONE fully-manual shard_map over
+            # (clients, model): its in_specs hand each rank exactly the
+            # bank/accumulator/block rows the "replicate" path owns, and
+            # GSPMD implements the one TP-layout -> block-row reshard of
+            # the round at that boundary. Banks and the aggregation carry
+            # keep the exact "replicate" placement and the global block
+            # layout is unchanged, so uplink accounting is identical;
+            # histories match within fp32 reassociation tolerance.
+            pre, post = client_fn
+            mesh, MX = self.mesh, self.MODEL_AXIS
+            pspecs, layouts, msd = self._auto_specs, self._layouts, ms or {}
+            blk_spec = lambda name: (P(ax, MX, None) if msd.get(name)
+                                     else P(ax))
+
+            def manual_fn(acc_i, blk, l_, cost_, thru_, w_, m_):
+                gt, nl_, uplink, scalar, wire = jax.vmap(post)(
+                    blk, l_, cost_, thru_)
+                # identical carry seeding + clients psum to the
+                # "replicate" local_chunk below, so per-chunk accumulation
+                # order matches ChunkedScheduler
+                first = jax.lax.axis_index(ax) == 0
+                acc_i = jax.tree.map(
+                    lambda a: jnp.where(first, a, 0.0), acc_i)
+                acc_i = jax.lax.psum(agg.accumulate(acc_i, w_, gt), ax)
+                return (acc_i, _keep_sampled(m_, nl_, l_), uplink, scalar,
+                        wire)
+
+            def sharded_chunk(acc, p, b, l, r, w_c, m_c):
+                cst = lambda v, s: jax.lax.with_sharding_constraint(
+                    v, NamedSharding(mesh, s))
+                p = jax.tree.map(cst, p, pspecs)
+                b = jax.tree.map(lambda v: cst(v, P(ax)), b)
+                asg, nr, loss, cost, thru = jax.vmap(
+                    lambda bb, rr: pre(p, bb, rr))(b, r)
+                loss = cst(loss, P(ax))
+                blocked = {
+                    name: jax.vmap(
+                        lambda g, nb=layouts[name][0],
+                        blk=layouts[name][1]:
+                        lbgm_lib._to_blocks(g, nb, blk))(asg[name])
+                    for name in asg}
+                manual = _shard_map(
+                    manual_fn, mesh=mesh,
+                    in_specs=(acc_specs,
+                              {name: blk_spec(name) for name in blocked},
+                              lbg_specs, cl,
+                              jax.tree.map(lambda _: cl, thru), cl, cl),
+                    out_specs=(acc_specs, lbg_specs, cl, cl, cl),
+                    **_SM_KW)
+                acc, nl, uplink, scalar, wire = manual(
+                    acc, blocked, l, cost, thru, w_c, m_c)
+                return (acc, nl, _keep_sampled(m_c, nr, r), loss, uplink,
+                        scalar, wire)
+
         collect = getattr(agg, "collect", False)
-        if collect:
+        if auto:
+            pass
+        elif collect:
             # robust collect mode: no carry to fold — each device emits its
             # local clients' raw payloads, stitched to the global (chunk,
             # ...) stack by the out specs (sparse (idx, val) payloads keep
@@ -929,13 +1068,25 @@ def make_scheduler(cfg: FLConfig, num_clients: int):
 
 class FLEngine:
     """loss_fn(params, batch_dict) -> (loss, metrics). Data is a list of
-    per-client dicts of numpy arrays (see repro.fed.partition)."""
+    per-client dicts of numpy arrays (see repro.fed.partition).
+
+    ``model_axes`` is the model component's optional logical-axis pytree
+    (``{name: ("embed", "heads"), ...}`` — the
+    ``train.sharding.params_shardings`` input). It is required by — and
+    only read under — ``FLConfig.model_sharding="auto"``, where the
+    sharded scheduler resolves it against the 2-D mesh so each client's
+    local-SGD forward/backward runs tensor-parallel over the ``model``
+    axis. ``fed.experiment.build_experiment`` threads it automatically
+    from components that return ``(params, loss_fn, axes_tree)``.
+    """
 
     def __init__(self, loss_fn: Callable, params: Dict[str, jax.Array],
-                 client_data: List[Dict[str, np.ndarray]], flcfg: FLConfig):
+                 client_data: List[Dict[str, np.ndarray]], flcfg: FLConfig,
+                 model_axes: Optional[Dict] = None):
         self.loss_fn = loss_fn
         self.cfg = flcfg
         self.params = params
+        self.model_axes = model_axes
         self.client_data = client_data
         K = flcfg.num_clients
         assert len(client_data) == K
@@ -1014,6 +1165,14 @@ class FLEngine:
         # BEFORE the banks are laid out below
         if hasattr(self.sched, "configure_store"):
             self.sched.configure_store(self.store, self._sparse_agg, params)
+        # model_sharding="auto": validate the contract, resolve the
+        # component's axes tree against the mesh, and place the params
+        # model-sharded (their per-device argument buffer becomes the 1/m
+        # shard). "replicate" (default) skips all of this — bit-for-bit
+        # the pre-knob engine.
+        self._auto_layouts = None
+        if flcfg.model_sharding == "auto":
+            self._setup_model_sharding(params, model_axes)
         # banks are allocated padded to the chunk grid once, up front; the
         # phantom rows stay zero forever (their mask is always 0), so the
         # per-round scan updates them in place with no pad/slice copies
@@ -1039,11 +1198,54 @@ class FLEngine:
         self.history: List[Dict[str, float]] = []
 
     # -------------------------------------------------------------- build
-    def _build_client_fn(self):
+    def _setup_model_sharding(self, params, model_axes):
+        """Wire ``model_sharding="auto"`` (called from ``__init__``).
+
+        Every rejection names the fix: auto mode runs the decision and
+        aggregation inside a nested manual-over-``model`` region, so it
+        only composes with the sparse streaming contract, and the
+        compressor pipeline (whose top-k/sign ops would hit model-sharded
+        gradients in GSPMD auto-land) must stay off.
+        """
+        cfg = self.cfg
+
+        def bad(msg):
+            raise ValueError(f"model_sharding='auto': {msg}")
+
+        if model_axes is None:
+            bad("the model component carries no sharding metadata — only "
+                "components returning (params, loss_fn, axes_tree) support "
+                "tensor-parallel client compute (the 'lm' component does; "
+                "fcn/cnn do not). Pass model_axes to FLEngine or use "
+                "model_sharding='replicate'")
+        if not hasattr(self.sched, "bind_model_axes"):
+            bad(f"scheduler {cfg.scheduler!r} cannot bind model axes; use "
+                "the built-in 'sharded' scheduler")
+        if getattr(self.agg, "collect", False):
+            bad(f"aggregator={cfg.aggregator!r} runs in collect mode, "
+                "which stacks per-client payloads across the model axis; "
+                "only the streaming 'mean' rule is supported")
+        if not (self._sparse_agg
+                and hasattr(self.store, "blocked_sparse_step")):
+            bad("requires the sparse aggregation contract over the "
+                "mesh-aware bank — set lbg_variant='topk-sharded' and "
+                "leave fused_kernels unset or True")
+        if cfg.compressor != "none":
+            bad(f"compressor={cfg.compressor!r} would run its top-k/sign "
+                "ops on model-sharded gradients inside the auto region; "
+                "only compressor='none' is supported")
+        # one global block layout, shared by the scheduler's gradient
+        # reshape and the store's blocked decision — mesh-shape
+        # independent, so uplink accounting matches "replicate" exactly
+        self._auto_layouts = {
+            name: lbgm_lib._block_layout(int(p.size), self.store.k_frac)
+            for name, p in params.items()}
+        self.sched.bind_model_axes(model_axes, params, self._auto_layouts)
+        self.params = jax.device_put(params, self.sched.param_shardings)
+
+    def _make_client_update(self):
         cfg = self.cfg
         loss_fn = self.loss_fn
-        pipeline = self._pipeline
-        store = self.store
 
         def client_update(params, batches):
             """tau local steps; batches: dict leaves (tau, b, ...)."""
@@ -1055,6 +1257,58 @@ class FLEngine:
             _, (gs, ls) = jax.lax.scan(step, params, batches)
             asg = jax.tree.map(lambda g: jnp.sum(g, 0), gs)
             return asg, jnp.mean(ls)
+
+        return client_update
+
+    def _build_client_halves(self):
+        """``client_fn`` split at the decision seam, for the sharded
+        scheduler's ``model_sharding="auto"`` path.
+
+        ``pre`` runs in the outer GSPMD auto region (tensor-parallel
+        local SGD + attack + uplink pipeline — all elementwise on the
+        model-sharded gradients); ``post`` runs inside the nested
+        manual-over-``model`` region on pre-sliced block rows (decision +
+        codec encode — the ops that cannot live in auto-land). Reserved
+        batch keys the decision half still needs (the codec seed) travel
+        in a pass-through dict. The composition is semantically
+        :meth:`_build_client_fn` restricted to the sparse streaming path,
+        the only one auto mode admits.
+        """
+        store = self.store
+        pipeline = self._pipeline
+        attack = self._payload_attack
+        codec = self.codec
+        client_update = self._make_client_update()
+        blocked_step = store.blocked_sparse_step(self._auto_layouts)
+
+        def pre(params, batches, resid_k):
+            batches = dict(batches)
+            byz = batches.pop(BYZ_KEY, None)
+            thru = {}
+            if WIRE_KEY in batches:
+                thru[WIRE_KEY] = batches.pop(WIRE_KEY)
+            extras = {k: batches.pop(k) for k in list(batches)
+                      if k.startswith("_atk_")}
+            asg, loss = client_update(params, batches)
+            if attack is not None:
+                asg = attack.apply(asg, byz, extras)
+            asg, resid_k, cost = pipeline(asg, resid_k)
+            return asg, resid_k, loss, cost, thru
+
+        def post(blocked_k, lbg_k, cost, thru):
+            gt, lbg_k, stats = blocked_step(blocked_k, lbg_k)
+            uplink = jnp.where(stats.sent_scalar, 1.0,
+                               store.full_round_cost(cost, stats))
+            gt, lbg_k, wire = codec.encode_sparse(gt, lbg_k, stats,
+                                                  thru.get(WIRE_KEY))
+            return gt, lbg_k, uplink, stats.sent_scalar, wire
+
+        return pre, post
+
+    def _build_client_fn(self):
+        pipeline = self._pipeline
+        store = self.store
+        client_update = self._make_client_update()
 
         sparse = self._sparse_agg
         attack = self._payload_attack
@@ -1115,9 +1369,12 @@ class FLEngine:
 
     def _build_round(self):
         cfg = self.cfg
-        client_fn = self._build_client_fn()
+        auto = getattr(self.sched, "_auto_specs", None) is not None
+        client_fn = (self._build_client_halves() if auto
+                     else self._build_client_fn())
         sched = self.sched
         aggregator = self.agg
+        pshard = self.sched.param_shardings if auto else None
 
         def round_fn(params, lbg, residual, batch, mask):
             """batch leaves: scheduler layout (see prepare_batch);
@@ -1133,6 +1390,11 @@ class FLEngine:
                 maskf)
             new_params = jax.tree.map(
                 lambda p, a: p - cfg.lr * a.astype(p.dtype), params, agg)
+            if pshard is not None:
+                # keep the updated params on their TP layout round over
+                # round (the donated input buffers are reused in place)
+                new_params = jax.tree.map(
+                    jax.lax.with_sharding_constraint, new_params, pshard)
             metrics = {
                 "loss": jnp.sum(losses * w),
                 "uplink_floats": jnp.sum(uplink * maskf),

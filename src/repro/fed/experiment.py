@@ -265,8 +265,13 @@ def build_experiment(spec: ExperimentSpec):
     spec.validate()
     # model init seed defaults to the experiment seed; an explicit
     # model.kw["seed"] wins (kw dicts are open-ended override surface)
-    params, loss_fn = MODELS.get(spec.model.name)(
+    built = MODELS.get(spec.model.name)(
         **{"seed": spec.fl.seed, **spec.model.kw})
+    # components may return (params, loss_fn) or, for architectures that
+    # know their tensor-parallel layout, (params, loss_fn, axes_tree) —
+    # the per-leaf named-axis metadata fl.model_sharding="auto" needs
+    params, loss_fn, model_axes = (
+        built if len(built) == 3 else (*built, None))
     train, held_out = DATASETS.get(spec.data.name)(**spec.data.kw)
     n_held = len(next(iter(held_out.values()))) if held_out else 0
     if n_held == 0 and (spec.eval.final or spec.eval.every):
@@ -278,7 +283,8 @@ def build_experiment(spec: ExperimentSpec):
     parts = PARTITIONERS.get(spec.partition.name)(
         train, spec.fl.num_clients, **spec.partition.kw)
     client_data = [{k: v[p] for k, v in train.items()} for p in parts]
-    engine = FLEngine(loss_fn, params, client_data, spec.fl)
+    engine = FLEngine(loss_fn, params, client_data, spec.fl,
+                      model_axes=model_axes)
 
     eval_batch = {k: jnp.asarray(v) for k, v in held_out.items()}
 
@@ -376,9 +382,12 @@ def sweep(base_spec: ExperimentSpec, overrides: OverridesLike,
 
 # --------------------------------------------------------------- built-ins
 #
-# Paper-native components. Model builders return ``(params, loss_fn)``;
-# dataset builders return ``(train, held_out)`` dicts of numpy arrays;
-# partitioners map ``(train, num_clients, **kw)`` to per-client index lists.
+# Paper-native components. Model builders return ``(params, loss_fn)`` or
+# ``(params, loss_fn, axes_tree)`` where ``axes_tree`` names each leaf's
+# dimensions for tensor-parallel layout (consumed when
+# ``fl.model_sharding="auto"``); dataset builders return
+# ``(train, held_out)`` dicts of numpy arrays; partitioners map
+# ``(train, num_clients, **kw)`` to per-client index lists.
 
 
 def _classifier_model(arch: str, seed: int, init_fn, apply_fn,
@@ -429,9 +438,11 @@ def _lm_model(seed: int = 0, arch: str = "qwen3-1.7b", reduced: bool = True,
         cfg = cfg.reduced()
     if arch_overrides:
         cfg = dataclasses.replace(cfg, **arch_overrides)
-    params, _ = init_lm(jax.random.PRNGKey(seed), cfg)
+    params, axes = init_lm(jax.random.PRNGKey(seed), cfg)
     loss_fn = lambda p, b: lm_loss(p, cfg, b["tokens"], b["labels"])
-    return params, loss_fn
+    # third element: the arch's named-axis tree, so fl.model_sharding=
+    # "auto" can lay the transformer out over the mesh's model axis
+    return params, loss_fn, axes
 
 
 @register_dataset("mixture")

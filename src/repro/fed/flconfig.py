@@ -60,6 +60,25 @@ class FLConfig:
     #     [c, m]   -> c-way client-data-parallel x m-way model-axis
     #                 sharding of the LBG decision/banks (tuples are
     #                 normalized to lists so equality survives a JSON trip)
+    model_sharding: str = "replicate"
+    # ^ "sharded" scheduler: how each client's local-SGD forward/backward
+    #   lays the MODEL out over the mesh's model axis.
+    #     "replicate" (default) — every device holds the full params; only
+    #                 the LBG bank / decision / aggregation rows shard over
+    #                 ``model`` (bit-for-bit today's engine on every mesh).
+    #     "auto"     — the model component's logical-axis tree (see
+    #                 ``fed.experiment`` — the "lm" component carries its
+    #                 arch's real axes) is resolved against the mesh via
+    #                 ``train.sharding.param_pspec`` and the per-client
+    #                 forward/backward runs tensor-parallel under GSPMD:
+    #                 per-device params + activations scale as ~M/m, and
+    #                 gradients arrive already laid out for the
+    #                 model-sharded bank/decision path (fp32-tolerance
+    #                 equal to "replicate", identical uplink accounting).
+    #                 Requires scheduler="sharded", a metadata-carrying
+    #                 model component, lbg_variant="topk-sharded" with
+    #                 sparse aggregation, aggregator="mean", and
+    #                 compressor="none" (validated at engine build).
     lbg_variant: str = "dense"       # registry key: dense | topk | null | ...
     lbg_kw: Optional[dict] = None    # e.g. {"k_frac": 0.1} for topk
     aggregator: str = "mean"         # registry key: mean | trimmed_mean |
@@ -138,6 +157,16 @@ class FLConfig:
                 f"scheduler={self.scheduler!r} is mesh-unaware; use "
                 "scheduler='sharded' (the only built-in that runs the 2-D "
                 "(clients, model) mesh)")
+        if self.model_sharding not in ("replicate", "auto"):
+            bad("model_sharding must be 'replicate' (every device holds "
+                "the full params — today's engine) or 'auto' (tensor-"
+                "parallel client compute from the model component's axis "
+                f"metadata) — got {self.model_sharding!r}")
+        if self.model_sharding == "auto" and self.scheduler != "sharded":
+            bad(f"model_sharding='auto' shards the client forward/backward "
+                "over the 2-D (clients, model) mesh, which only "
+                f"scheduler='sharded' runs — got "
+                f"scheduler={self.scheduler!r}")
         # identity check, not `in`: 0/1 compare == to False/True but would
         # silently miss the `is not False` gate in the engine's aggregator
         # selection — reject them with the fix in the message

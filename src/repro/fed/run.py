@@ -22,6 +22,16 @@ mesh ``n`` is exactly ``[n, 1]``; force host devices with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU). See
 ``examples/specs/yi34b_mesh2x4.json`` for a full 2-D large-arch spec.
 
+``--set fl.model_sharding=auto`` additionally runs each client's
+local-SGD forward/backward tensor-parallel along the model axis
+(default ``replicate`` keeps it replicated — bit-for-bit the pre-knob
+engine). Requires ``fl.scheduler=sharded``, a model component that
+carries sharding metadata (``model.name=lm``; fcn/cnn refuse),
+``fl.lbg_variant=topk-sharded`` and ``fl.compressor=none``; histories
+match ``replicate`` at fp32 tolerance with identical uplink
+accounting. ``examples/specs/yi34b_tp2x4.json`` runs the full yi-34b
+layer count (width-reduced) tensor-parallel on a 2x4 mesh.
+
 The uplink wire codec rides the same knobs: ``--set fl.codec=int8``
 (or ``fp8`` / ``delta_idx``) quantizes the sparse LBGM payloads to ~1
 byte/value with per-block-row power-of-two scales and varint-delta

@@ -237,17 +237,6 @@ def test_sweep_grid_and_explicit_points():
     assert explicit[0][1].spec.fl.tau == 1
 
 
-def test_flsystem_emits_deprecation_warning():
-    from repro.fed import FLSystem
-    engine = _hand_wired_engine()  # donor for wiring args
-    with pytest.warns(DeprecationWarning, match="ExperimentSpec"):
-        fl = FLSystem(engine.loss_fn, engine.params, engine.client_data,
-                      engine.cfg)
-    # the legacy alias still runs through the validated engine path
-    m = fl.run_round(np.random.RandomState(0))
-    assert np.isfinite(m["loss"])
-
-
 def test_lbgm_config_bridge_single_source_of_truth():
     from repro.configs.base import LBGMConfig
     lb = LBGMConfig(variant="topk", k_frac=0.05, num_clients=8,
