@@ -29,6 +29,7 @@ BENCH_PATH_DEFAULT = "BENCH_engine.json"
 
 def build_spec(num_clients=20, tau=2, lr=0.05, batch_size=16, seed=0,
                noniid=True, n_data=2000, n_eval=500, name="benchmark",
+               classes_per_client=3,
                model_kw: Optional[Dict[str, Any]] = None, **flkw):
     """Paper-style FL experiment spec: FCN classifier on synthetic mixture
     data, non-iid label-skew split by default.
@@ -37,12 +38,16 @@ def build_spec(num_clients=20, tau=2, lr=0.05, batch_size=16, seed=0,
     chunk_size=32 for the memory-bounded large-cohort path;
     fused_kernels=False pins the legacy dense aggregation path.
     ``model_kw`` passes arch overrides to the model component (e.g.
-    {"d_model": 512} to scale the FCN width).
+    {"d_model": 512} to scale the FCN width). ``classes_per_client``
+    tunes the label-skew severity (1 = each client holds a single
+    class's shard — the regime where losing a client cohort can lose
+    whole classes, used by the async straggler benchmark).
     """
     from repro.fed import ComponentSpec, EvalPolicy, ExperimentSpec, FLConfig
 
     partition = (ComponentSpec("label_skew",
-                               {"classes_per_client": 3, "seed": seed})
+                               {"classes_per_client": classes_per_client,
+                                "seed": seed})
                  if noniid else ComponentSpec("iid", {"seed": seed}))
     return ExperimentSpec(
         name=name,
@@ -84,6 +89,8 @@ def spec_metadata(spec) -> Dict[str, Any]:
         "model_sharding": fl.model_sharding,
         "codec": fl.codec,
         "codec_kw": fl.codec_kw,
+        "latency": fl.latency,
+        "latency_kw": fl.latency_kw,
     }
 
 

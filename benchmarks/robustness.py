@@ -42,8 +42,15 @@ GM_TOL = 0.05
 #: and plain mean must lose at least this much accuracy vs clean there
 MEAN_MIN_DROP = 0.20
 
-#: the attack grid: (attack registry key, attack_kw)
-ATTACKS = (("sign_flip", {"scale": 4.0}), ("gaussian", {"sigma": 2.0}))
+#: the attack grid: (attack registry key, attack_kw). The last two are
+#: the PR-9 coordinated/adaptive attacks: colluding_sign aims the whole
+#: cohort's mass down one shared random direction (the case independent
+#: flips under-sell), adaptive_scaled amplifies the flipped update —
+#: and, under the buffered scheduler, pre-compensates the server's
+#: staleness discount.
+ATTACKS = (("sign_flip", {"scale": 4.0}), ("gaussian", {"sigma": 2.0}),
+           ("colluding_sign", {"scale": 4.0}),
+           ("adaptive_scaled", {"scale": 4.0}))
 
 
 def _cell(regime: str, agg: str, rounds: int, num_clients: int,

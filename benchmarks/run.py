@@ -15,7 +15,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig5,fig6,fig7,fig8,kernels,"
-                         "cohort,robustness,wire_bytes")
+                         "cohort,robustness,wire_bytes,async")
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--toy", action="store_true",
                     help="tiny problem sizes (CI smoke): small kernel "
@@ -74,6 +74,14 @@ def main() -> None:
             wire_bytes.run(rounds=3, num_clients=8, n_data=320)
         else:
             wire_bytes.run(rounds=args.rounds)
+    if on("async"):
+        from benchmarks import async_heterogeneity
+        if args.toy:
+            async_heterogeneity.run(rounds=4, num_clients=8, n_data=320,
+                                    fracs=(0.25,), delays=(2,),
+                                    aggs=("mean",), headline_frac=0.25)
+        else:
+            async_heterogeneity.run(rounds=max(args.rounds, 40))
 
 
 if __name__ == '__main__':

@@ -42,6 +42,7 @@ _EXPORTS = {
     "register_compressor": "repro.fed.registry",
     "register_scheduler": "repro.fed.registry",
     "register_lbg_store": "repro.fed.registry",
+    "register_latency": "repro.fed.registry",
     # data partitioning
     "partition_iid": "repro.fed.partition",
     "partition_label_skew": "repro.fed.partition",

@@ -49,6 +49,13 @@ from repro.fed.registry import ATTACKS, register_attack
 #: reserved batch keys the engine strips before the local-SGD scan
 BYZ_KEY = "_byz"
 SEED_KEY = "_atk_seed"
+CSEED_KEY = "_atk_cseed"
+STALE_KEY = "_atk_stale"
+#: ^ STALE_KEY: under scheduler="buffered" the engine threads each
+#: client's rounds-of-delay draw through the batch dict, so an adaptive
+#: attack knows how stale its payload will be on delivery and can
+#: pre-compensate the server's staleness discount. Absent (treated as
+#: fresh) on the synchronous schedulers.
 
 
 def select_byzantine(num_clients: int, attack_frac: float,
@@ -168,6 +175,78 @@ class Gaussian(PayloadAttack):
                          * jax.random.normal(leaf_key, x.shape, jnp.float32)
                          ).astype(x.dtype)
         return out
+
+
+@register_attack("colluding_sign")
+class ColludingSign(PayloadAttack):
+    """The whole Byzantine cohort pushes one shared malicious direction.
+
+    Independent sign flips partially cancel under a mean and are easy
+    for a geometric median to out-vote; a *colluding* cohort instead
+    agrees (via one shared per-round seed from the fault stream —
+    ``round_extras`` broadcasts the same uint32 to every client) on a
+    single random unit direction and each member submits
+    ``-scale * ||g_k|| * u``, i.e. its own update's mass aimed down the
+    agreed direction. This is the coordinated variant the robust-
+    aggregation literature treats as the harder case (cf. blades'
+    ALIE-style collusion).
+    """
+
+    def __init__(self, scale: float = 1.0):
+        self.scale = float(scale)
+
+    def round_extras(self, rng, num_clients):
+        shared = rng.randint(0, 2 ** 31 - 1)
+        return {CSEED_KEY: np.full(num_clients, shared, np.uint32)}
+
+    def _corrupt(self, asg, extras):
+        import jax
+        import jax.numpy as jnp
+        key = jax.random.PRNGKey(extras[CSEED_KEY])
+        n2 = 0.0
+        d2 = 0.0
+        dirs = {}
+        for i, (name, x) in enumerate(asg.items()):
+            n2 = n2 + jnp.sum(jnp.square(x.astype(jnp.float32)))
+            dirs[name] = jax.random.normal(jax.random.fold_in(key, i),
+                                           x.shape, jnp.float32)
+            d2 = d2 + jnp.sum(jnp.square(dirs[name]))
+        coeff = (-self.scale * jnp.sqrt(n2)
+                 / jnp.maximum(jnp.sqrt(d2), 1e-12))
+        return {name: (coeff * dirs[name]).astype(asg[name].dtype)
+                for name in asg}
+
+
+@register_attack("adaptive_scaled")
+class AdaptiveScaled(PayloadAttack):
+    """g -> -scale * (1 + s)^alpha * g: amplification matched to the
+    cohort's payload norm and to staleness.
+
+    Flipping the client's own accumulated gradient keeps the attack
+    magnitude proportional to the cohort's current payload norm (unlike
+    a fixed-sigma noise attack, it never over- or under-shoots as
+    training converges). Under the buffered scheduler the engine threads
+    each client's delay draw in as ``STALE_KEY``, and the attacker
+    amplifies by ``(1 + s)^alpha`` to cancel the server's
+    ``1/(1+s)^alpha`` staleness discount — a stale Byzantine payload
+    lands with the same effective mass as a fresh one. On synchronous
+    schedulers ``STALE_KEY`` is absent and this degrades to an
+    amplified sign flip.
+    """
+
+    def __init__(self, scale: float = 4.0, alpha: float = 0.5):
+        self.scale = float(scale)
+        self.alpha = float(alpha)
+
+    def _corrupt(self, asg, extras):
+        import jax
+        import jax.numpy as jnp
+        amp = jnp.float32(self.scale)
+        s = extras.get(STALE_KEY)
+        if s is not None:
+            amp = amp * (1.0 + s.astype(jnp.float32)) ** self.alpha
+        return jax.tree.map(
+            lambda x: (-amp * x.astype(jnp.float32)).astype(x.dtype), asg)
 
 
 @register_attack("label_flip")

@@ -34,6 +34,30 @@ declarative ``ExperimentSpec`` API builds on):
      bytes O(K·k_frac·M / (c·m)) — the memory axis for the >=34B archs,
      where the look-back bank dominates).
 
+   * ``"buffered"`` — FedBuff-style buffered *asynchronous* aggregation on
+     the chunked layout: stragglers are latency, not absence. A per-client
+     latency model (``FLConfig.latency`` / ``latency_kw`` —
+     ``repro.fed.latency``; delays drawn per round from the dedicated
+     fault stream, so the async replay is seed-exact) routes each
+     dispatched client's sparse ``(idx, val)·(w·gscale)`` payload into a
+     bounded staleness buffer (one in-flight slot per client) instead of
+     the participation fold; the commutative block-layout aggregation
+     carry folds each payload in the round it *arrives*, its
+     dispatch-round weight discounted by the model's staleness weight
+     (``1/(1+s)^alpha``, where-gated to exactly 1.0 at ``s == 0``).
+     Per-client compute heterogeneity rides the batch dict as a
+     variable-``tau`` vector (reserved key ``"_tau"``): slow clients run
+     fewer local steps rather than vanish. Wire/uplink bytes are
+     accounted in the *arrival* round (delivery-time CommLedger).
+     With ``latency="none"`` and no dropout the plan degenerates to
+     dispatch == deliver == mask with zero staleness, and the round —
+     weights, fold order, metrics, banks — is bit-for-bit equal to
+     ``"chunked"`` (tier-1 tested). Requires the sparse aggregation
+     contract (top-k store, ``fused_kernels`` not False); composes with
+     every aggregator rule (staleness-aware weighting reaches the robust
+     rules through the weight vector) and every wire codec (the buffer
+     stores payloads in their wire layout).
+
    All schedulers accumulate the server aggregate through the engine's
    *aggregator* with the *same* strictly sequential per-client ``lax.scan``
    (carry += w_k * g_k, k = 0..K-1), so their float addition order is
@@ -166,9 +190,10 @@ from repro.core.lbgm_sharded import (_SM_KW, _shard_map,
                                      make_local_topk_step,
                                      make_mesh_topk_step)
 from repro.core.tree_math import tree_size, tree_zeros_like
-from repro.fed.attacks import (BYZ_KEY, fault_rng, make_attack,
+from repro.fed.attacks import (BYZ_KEY, STALE_KEY, fault_rng, make_attack,
                                select_byzantine)
 from repro.fed.flconfig import FLConfig  # noqa: F401  (re-export)
+from repro.fed.latency import make_latency
 from repro.fed.registry import (LBG_STORES, SCHEDULERS, register_lbg_store,
                                 register_scheduler)
 from repro.fed.robust import (CollectDenseAggregator,
@@ -176,6 +201,10 @@ from repro.fed.robust import (CollectDenseAggregator,
                               ScalarMedianSparseAggregator, make_robust_rule)
 from repro.kernels.ops import lbgm_dequant_accum
 from repro.kernels.ref import lbgm_dequant_accum_ref
+
+#: reserved batch key: per-client local-step budgets (the buffered
+#: scheduler's compute heterogeneity) — stripped before the SGD scan
+TAU_KEY = "_tau"
 
 
 def resolve_fused_kernels(cfg: FLConfig) -> bool:
@@ -693,6 +722,123 @@ class ChunkedScheduler:
                 wire.reshape(Kp)[:K])
 
 
+@register_scheduler("buffered")
+class BufferedScheduler(ChunkedScheduler):
+    """FedBuff-style buffered asynchronous aggregation (chunked layout).
+
+    Three stages per round, one jit'd function:
+
+    1. **compute** — the standard chunked ``lax.scan`` runs every client
+       (local SGD + attack + pipeline + Algorithm-1 decision + codec
+       encode); state banks update only under the *dispatch* mask (a
+       client busy with an in-flight payload neither recomputes its bank
+       nor re-dispatches). Payloads ride the scan outputs like collect
+       mode — they go to the buffer, not straight into the fold.
+    2. **buffer write** — each dispatching client overwrites its single
+       in-flight slot (payload leaves in wire layout, gscale, its
+       dispatch-round weight, and uplink/scalar/wire accounting) via a
+       ``where`` on the dispatch mask; everyone else's slot is carried
+       bit-unchanged.
+    3. **delivery fold** — the round's *delivered* slots are folded with
+       weights ``w0 * disc(stale) * deliver``, normalized over the
+       delivered cohort. Streaming rules fold chunk-by-chunk inside a
+       scan with the exact per-chunk ``accumulate`` structure
+       :class:`ChunkedScheduler` compiles (same expressions, same
+       strictly sequential order — the zero-latency bit-for-bit
+       guarantee); collect rules get the full (Kp, ...) stack, so
+       staleness-aware weighting reaches mean / geometric_median /
+       scalar_median through the one weight vector they already honor.
+
+    Delivered uplink/scalar/wire are reported in the arrival round; a
+    round that delivers nothing reports zeros (the ledger guards its
+    savings ratios against a zero-vanilla round).
+    """
+
+    #: engine marker: run via run_buffered with the host delivery plan
+    delivery_weighted = True
+
+    def run(self, client_fn, agg, params, batch, lbg, resid, w, maskf):
+        raise TypeError(
+            "BufferedScheduler aggregates through run_buffered(...); the "
+            "engine threads the delivery plan and staleness buffer")
+
+    def run_buffered(self, client_fn, agg, params, batch, lbg, resid,
+                     buf, w0, dispatchf, deliverf, stalef, disc):
+        K, chunk, pad = self.num_clients, self.chunk, self.pad
+        dzp, w0p = dispatchf, w0
+        if pad:
+            z = jnp.zeros(pad, jnp.float32)
+            dzp = jnp.concatenate([dispatchf, z])
+            w0p = jnp.concatenate([w0, z])
+        Kp = K + pad
+        n_chunks = Kp // chunk
+        slice_at = lambda t, i: jax.tree.map(
+            lambda x: jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk), t)
+        update_at = lambda t, u, i: jax.tree.map(
+            lambda x, v: jax.lax.dynamic_update_slice_in_dim(
+                x, v, i * chunk, axis=0), t, u)
+
+        def chunk_body(carry, xs):
+            lbg_bank, res_bank = carry
+            i, b_c, m_c = xs
+            l_c, r_c = slice_at(lbg_bank, i), slice_at(res_bank, i)
+            gt, nl, nr, loss, uplink, scalar, wire = jax.vmap(
+                lambda b, l, r: client_fn(params, b, l, r))(b_c, l_c, r_c)
+            lbg_bank = update_at(lbg_bank, _keep_sampled(m_c, nl, l_c), i)
+            res_bank = update_at(res_bank, _keep_sampled(m_c, nr, r_c), i)
+            return (lbg_bank, res_bank), (gt, loss, uplink, scalar, wire)
+
+        (new_lbg, new_res), ys = jax.lax.scan(
+            chunk_body, (lbg, resid),
+            (jnp.arange(n_chunks), batch, dzp.reshape(n_chunks, chunk)))
+        gt, loss, uplink, scalar, wire = ys
+        flat = lambda x: x.reshape((-1,) + x.shape[2:])
+        send, gscale = jax.tree.map(flat, gt)
+        loss, uplink, scalar, wire = (flat(loss), flat(uplink),
+                                      flat(scalar), flat(wire))
+
+        def gate(new, old):
+            d = dzp.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(d > 0, new.astype(old.dtype), old)
+        nbuf = {
+            "send": jax.tree.map(gate, send, buf["send"]),
+            "gscale": gate(gscale, buf["gscale"]),
+            "w0": gate(w0p, buf["w0"]),
+            "uplink": gate(uplink, buf["uplink"]),
+            "scalar": gate(scalar.astype(jnp.float32), buf["scalar"]),
+            "wire": gate(wire, buf["wire"]),
+        }
+
+        # delivery weights: stored dispatch-round weight x staleness
+        # discount x delivered flag, normalized with the same (K,)
+        # expression round_fn applies to the synchronous schedulers —
+        # under the zero-latency plan (dispatch == deliver == mask,
+        # stale == 0, disc(0) == 1.0 exactly, undelivered slots zeroed
+        # by the flag) this reproduces the chunked weights bit-for-bit.
+        wd = nbuf["w0"][:K] * disc(stalef) * deliverf
+        wn = wd / jnp.maximum(jnp.sum(wd), 1e-12)
+        wnp = jnp.concatenate([wn, jnp.zeros(pad, wn.dtype)]) if pad \
+            else wn
+        if getattr(agg, "collect", False):
+            out = agg.reduce(wnp, (nbuf["send"], nbuf["gscale"]))
+        else:
+            def fold_body(acc, xs):
+                w_c, send_c, gs_c = xs
+                return agg.accumulate(acc, w_c, (send_c, gs_c)), None
+
+            acc, _ = jax.lax.scan(
+                fold_body, agg.init(params),
+                (wnp.reshape(n_chunks, chunk),
+                 jax.tree.map(lambda x: x.reshape(
+                     (n_chunks, chunk) + x.shape[1:]), nbuf["send"]),
+                 nbuf["gscale"].reshape(n_chunks, chunk)))
+            out = agg.finalize(acc)
+        dlv = lambda x: x[:K] * deliverf
+        return (out, new_lbg, new_res, nbuf, loss[:K],
+                dlv(nbuf["uplink"]), dlv(nbuf["scalar"]),
+                dlv(nbuf["wire"]))
+
+
 def pick_sharded_chunk(num_clients: int, chunk_size: int, n_dev: int) -> int:
     """Scan-block size for the sharded scheduler.
 
@@ -1160,6 +1306,31 @@ class FLEngine:
                 "the sparse payload path (lbg_variant='topk'/'topk-sharded' "
                 "with fused_kernels not False) or vanilla FL "
                 "(use_lbgm=False)")
+        # buffered scheduler (FedBuff-style): latency model, host-side
+        # delivery plan state, and — below, once Kp is known — the
+        # device-side staleness buffer. Synchronous schedulers skip all
+        # of it (attributes stay None, every code path unchanged).
+        self._latency = None
+        self._buffer = None
+        self._tau_vec = None
+        if getattr(self.sched, "delivery_weighted", False):
+            if not self._sparse_agg:
+                raise ValueError(
+                    "scheduler='buffered' buffers sparse (idx, val) "
+                    "payloads between dispatch and delivery — use "
+                    "lbg_variant='topk'/'topk-sharded' and leave "
+                    "fused_kernels unset or True")
+            self._latency = make_latency(flcfg)
+            # host delivery plan: at most one in-flight payload per
+            # client; arrival[k] = the round it lands (-1 = idle)
+            self._arrival = np.full(K, -1, np.int64)
+            self._dispatch_round = np.zeros(K, np.int64)
+            self._plan_round = 0
+            self._pending_delays = None
+            self._tau_vec = self._latency.sample_tau(K, flcfg.tau)
+            #: delivered-payload count across the run (wire bytes are
+            #: attributed per delivery — see the wire-attribution tests)
+            self.n_delivered = 0.0
         # 2-D (clients, model) mesh: the scheduler decides — with the
         # store — which bank/aggregator leaves shard over the model axis,
         # BEFORE the banks are laid out below
@@ -1189,9 +1360,13 @@ class FLEngine:
         if hasattr(self.sched, "layout_banks"):
             self.lbg = self.sched.layout_banks(self.lbg)
             self.residual = self.sched.layout_banks(self.residual)
-        # donate the LBG/residual banks: the round's new state reuses the
-        # old banks' buffers instead of allocating a second O(K·M) copy
-        self._round = jax.jit(self._build_round(), donate_argnums=(1, 2))
+        if self._latency is not None:
+            self._buffer = self._init_buffer(params, Kp)
+        # donate the LBG/residual banks (and the staleness buffer): the
+        # round's new state reuses the old buffers instead of allocating
+        # a second O(K·M) copy
+        donate = (1, 2, 3) if self._latency is not None else (1, 2)
+        self._round = jax.jit(self._build_round(), donate_argnums=donate)
         # uplink accounting lives in one place (repro.comm.accounting);
         # run_round records into it and history fields derive from it
         self.ledger = CommLedger()
@@ -1243,20 +1418,67 @@ class FLEngine:
         self.sched.bind_model_axes(model_axes, params, self._auto_layouts)
         self.params = jax.device_put(params, self.sched.param_shardings)
 
-    def _make_client_update(self):
+    def _init_buffer(self, params, Kp):
+        """The buffered scheduler's staleness buffer: one in-flight slot
+        per (padded) client — payload leaves in the codec's wire layout,
+        the payload's gscale, the client's dispatch-round weight, and the
+        uplink/scalar/wire accounting scalars reported on delivery."""
+        k_frac = self.store.k_frac
+        lossy = self.codec.lossy
+        val_dt = self.codec.wire_dtype if lossy else jnp.float32
+        send = {}
+        for name, leaf in params.items():
+            nb, _, kb = lbgm_lib._block_layout(int(leaf.size), k_frac)
+            sk = {"idx": jnp.zeros((Kp, nb, kb), jnp.int32),
+                  "val": jnp.zeros((Kp, nb, kb), val_dt)}
+            if "scale" in self.codec.payload_keys:
+                sk["scale"] = jnp.ones((Kp, nb, 1), jnp.float32)
+            send[name] = sk
+        zk = lambda: jnp.zeros(Kp, jnp.float32)
+        return {"send": send, "gscale": zk(), "w0": zk(),
+                "uplink": zk(), "scalar": zk(), "wire": zk()}
+
+    def _make_client_update(self, hetero_tau: bool = False):
         cfg = self.cfg
         loss_fn = self.loss_fn
 
-        def client_update(params, batches):
-            """tau local steps; batches: dict leaves (tau, b, ...)."""
-            def step(p, bt):
-                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, bt)
+        if not hetero_tau:
+            def client_update(params, batches):
+                """tau local steps; batches: dict leaves (tau, b, ...)."""
+                def step(p, bt):
+                    (l, _), g = jax.value_and_grad(loss_fn,
+                                                   has_aux=True)(p, bt)
+                    p2 = jax.tree.map(
+                        lambda x, gg: x - cfg.lr * gg.astype(x.dtype),
+                        p, g)
+                    return p2, (g, l)
+                _, (gs, ls) = jax.lax.scan(step, params, batches)
+                asg = jax.tree.map(lambda g: jnp.sum(g, 0), gs)
+                return asg, jnp.mean(ls)
+
+            return client_update
+
+        def client_update(params, batches, tau_k):
+            """Variable-tau local SGD (buffered compute heterogeneity):
+            the scan still runs the static ``cfg.tau`` steps — same
+            shapes, same jit — but steps ``i >= tau_k`` are masked to
+            no-ops (zero gradient, frozen params), so a slow client's
+            accumulated update and reported loss cover exactly its
+            ``tau_k`` real steps."""
+            def step(p, xt):
+                i, bt = xt
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p,
+                                                                      bt)
+                on = (i < tau_k).astype(jnp.float32)
+                g = jax.tree.map(lambda gg: gg * on.astype(gg.dtype), g)
                 p2 = jax.tree.map(
                     lambda x, gg: x - cfg.lr * gg.astype(x.dtype), p, g)
-                return p2, (g, l)
-            _, (gs, ls) = jax.lax.scan(step, params, batches)
+                return p2, (g, l, on)
+            _, (gs, ls, ons) = jax.lax.scan(
+                step, params, (jnp.arange(cfg.tau), batches))
             asg = jax.tree.map(lambda g: jnp.sum(g, 0), gs)
-            return asg, jnp.mean(ls)
+            loss = jnp.sum(ls * ons) / jnp.maximum(jnp.sum(ons), 1.0)
+            return asg, loss
 
         return client_update
 
@@ -1308,7 +1530,8 @@ class FLEngine:
     def _build_client_fn(self):
         pipeline = self._pipeline
         store = self.store
-        client_update = self._make_client_update()
+        hetero_tau = self._tau_vec is not None
+        client_update = self._make_client_update(hetero_tau)
 
         sparse = self._sparse_agg
         attack = self._payload_attack
@@ -1332,9 +1555,13 @@ class FLEngine:
             batches = dict(batches)
             byz = batches.pop(BYZ_KEY, None)
             wire_seed = batches.pop(WIRE_KEY, None)
+            tau_k = batches.pop(TAU_KEY, None)
             extras = {k: batches.pop(k) for k in list(batches)
                       if k.startswith("_atk_")}
-            asg, loss = client_update(params, batches)
+            if hetero_tau:
+                asg, loss = client_update(params, batches, tau_k)
+            else:
+                asg, loss = client_update(params, batches)
             if attack is not None:
                 # the Byzantine client corrupts its accumulated gradient
                 # BEFORE the uplink pipeline and the LBGM decision: its
@@ -1375,6 +1602,40 @@ class FLEngine:
         sched = self.sched
         aggregator = self.agg
         pshard = self.sched.param_shardings if auto else None
+
+        if self._latency is not None:
+            disc = self._latency.staleness_weight
+
+            def round_fn(params, lbg, residual, buf, batch, dispatch,
+                         deliver, stale):
+                """Buffered delivery-time round. ``dispatch`` /
+                ``deliver`` / ``stale`` are the host plan's (K,) vectors
+                (see ``_sample_mask``); ``buf`` is the staleness buffer.
+                Loss is reported over the round's *computing* (dispatch)
+                cohort; uplink/scalar/wire over the *delivered* payloads
+                — bytes land in the round they arrive."""
+                dispatchf = dispatch.astype(jnp.float32)
+                deliverf = deliver.astype(jnp.float32)
+                stalef = stale.astype(jnp.float32)
+                w0 = self.weights * dispatchf
+                wl = w0 / jnp.maximum(jnp.sum(w0), 1e-12)
+                (agg_out, new_lbg, new_res, new_buf, losses, uplink,
+                 scalar, wire) = sched.run_buffered(
+                    client_fn, aggregator, params, batch, lbg, residual,
+                    buf, w0, dispatchf, deliverf, stalef, disc)
+                new_params = jax.tree.map(
+                    lambda p, a: p - cfg.lr * a.astype(p.dtype), params,
+                    agg_out)
+                metrics = {
+                    "loss": jnp.sum(losses * wl),
+                    "uplink_floats": jnp.sum(uplink),
+                    "frac_scalar": jnp.sum(scalar)
+                    / jnp.maximum(jnp.sum(deliverf), 1.0),
+                    "wire_bytes": jnp.sum(wire),
+                }
+                return new_params, new_lbg, new_res, new_buf, metrics
+
+            return round_fn
 
         def round_fn(params, lbg, residual, batch, mask):
             """batch leaves: scheduler layout (see prepare_batch);
@@ -1443,6 +1704,22 @@ class FLEngine:
             # (and the prefetcher's behavior) is bit-for-bit unchanged.
             stacked[WIRE_KEY] = self._codec_rng.randint(
                 0, 2 ** 31 - 1, size=cfg.num_clients).astype(np.uint32)
+        if self._latency is not None:
+            # buffered: this round's per-client delay draws happen HERE —
+            # an adaptive attack reads its own delay (STALE_KEY) from the
+            # batch dict, and _sample_mask (always called right after
+            # this, on both the sync and prefetch paths) consumes the
+            # cached vector to build the dispatch/deliver plan. The
+            # fault-stream order per round is fixed: attack extras, then
+            # delays, then dropout draws — so the async replay is
+            # seed-exact.
+            d = np.asarray(self._latency.sample_delays(
+                self._fault_rng, cfg.num_clients), np.int64)
+            self._pending_delays = d
+            if self._payload_attack is not None:
+                stacked[STALE_KEY] = d.astype(np.float32)
+            if self._tau_vec is not None:
+                stacked[TAU_KEY] = np.asarray(self._tau_vec, np.int32)
         stacked = self.sched.prepare_batch(stacked)
         return {k: jnp.asarray(v) for k, v in stacked.items()}
 
@@ -1481,7 +1758,33 @@ class FLEngine:
                 dropped = np.zeros_like(mask)
                 dropped[int(np.argmax(np.where(mask > 0, d, -1.0)))] = 1.0
             mask = dropped
-        return mask
+        if self._latency is None:
+            return mask
+        # buffered: turn the participation mask into a delivery plan.
+        # dispatch = sampled & idle (one in-flight slot per client); a
+        # dispatched payload arrives `delay` rounds later and is folded,
+        # staleness-discounted, in its arrival round. Pure integer host
+        # bookkeeping over the already-drawn delays — no extra rng.
+        t = self._plan_round
+        self._plan_round += 1
+        d = self._pending_delays
+        if d is None:
+            # mask drawn without a preceding _sample_batches (tests /
+            # external drivers): draw the delays now — same stream, same
+            # per-round order
+            d = np.asarray(self._latency.sample_delays(
+                self._fault_rng, self.cfg.num_clients), np.int64)
+        self._pending_delays = None
+        dispatch = (mask > 0) & (self._arrival < 0)
+        self._dispatch_round[dispatch] = t
+        self._arrival[dispatch] = t + d[dispatch]
+        deliver = self._arrival == t
+        stale = np.where(deliver, t - self._dispatch_round, 0)
+        self._arrival[deliver] = -1
+        return {"mask": mask,
+                "dispatch": dispatch.astype(np.float64),
+                "deliver": deliver.astype(np.float64),
+                "stale": stale.astype(np.float64)}
 
     # -------------------------------------------------------------- run
     def prefetcher(self, rng: np.random.RandomState,
@@ -1505,11 +1808,26 @@ class FLEngine:
         else:
             batch = self._sample_batches(rng)
             mask = self._sample_mask(rng)
-        self.params, self.lbg, self.residual, metrics = self._round(
-            self.params, self.lbg, self.residual, batch,
-            jnp.asarray(mask, jnp.float32))
+        if isinstance(mask, dict):
+            # buffered delivery plan: uplink/wire (and the vanilla
+            # baseline) are attributed to the round payloads ARRIVE in,
+            # so a straggler's bytes land when the server folds them
+            plan = mask
+            (self.params, self.lbg, self.residual, self._buffer,
+             metrics) = self._round(
+                self.params, self.lbg, self.residual, self._buffer,
+                batch, jnp.asarray(plan["dispatch"], jnp.float32),
+                jnp.asarray(plan["deliver"], jnp.float32),
+                jnp.asarray(plan["stale"], jnp.float32))
+            n_del = float(plan["deliver"].sum())
+            self.n_delivered += n_del
+            vanilla = n_del * tree_size(self.params)
+        else:
+            self.params, self.lbg, self.residual, metrics = self._round(
+                self.params, self.lbg, self.residual, batch,
+                jnp.asarray(mask, jnp.float32))
+            vanilla = float(mask.sum()) * tree_size(self.params)
         m = {k: float(v) for k, v in metrics.items()}
-        vanilla = float(mask.sum()) * tree_size(self.params)
         # vanilla wire = dense fp32, 4 bytes per param per participant —
         # the baseline both the float and byte savings are measured from
         self.ledger.record(m["uplink_floats"], vanilla,

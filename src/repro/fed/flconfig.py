@@ -116,6 +116,15 @@ class FLConfig:
     #   ``wire_bytes`` ledger alongside the fp32-scalar counters.
     codec_kw: Optional[dict] = None  # e.g. {"stochastic": False} to pin
     #   nearest rounding for int8/fp8 (see repro.comm.wire)
+    latency: str = "none"            # registry key: none | fixed | uniform |
+    #   lognormal | straggler — the per-client rounds-of-delay model for
+    #   scheduler="buffered" (repro.fed.latency). "none" (default) keeps
+    #   every payload synchronous; any other model draws deterministic
+    #   per-round delays from the dedicated fault stream, so the async
+    #   replay is seed-exact and clean runs stay bit-for-bit untouched.
+    latency_kw: Optional[dict] = None      # e.g. {"frac": 0.2, "delay": 4}
+    #   for straggler, {"scale": 2.0} for lognormal; alpha sets the
+    #   staleness discount 1/(1+s)^alpha every model carries
 
     # ---------------------------------------------------------- validation
     def __post_init__(self):
@@ -152,7 +161,8 @@ class FLConfig:
             elif not int_ge1(self.mesh):
                 bad("mesh must be None, a client-device count >= 1, or a "
                     f"[clients, model] pair — got {self.mesh!r}")
-        if self.mesh_model_dim > 1 and self.scheduler in ("vmap", "chunked"):
+        if self.mesh_model_dim > 1 and self.scheduler in ("vmap", "chunked",
+                                                          "buffered"):
             bad(f"mesh={self.mesh!r} asks for model-axis sharding but "
                 f"scheduler={self.scheduler!r} is mesh-unaware; use "
                 "scheduler='sharded' (the only built-in that runs the 2-D "
@@ -184,10 +194,38 @@ class FLConfig:
         if self.attack is None and self.attack_frac > 0:
             bad(f"attack_frac={self.attack_frac} but attack=None — name an "
                 "attack (e.g. attack='sign_flip') or set attack_frac=0")
-        for kw_name in ("aggregator_kw", "attack_kw", "codec_kw"):
+        for kw_name in ("aggregator_kw", "attack_kw", "codec_kw",
+                        "latency_kw"):
             kw = getattr(self, kw_name)
             if kw is not None and not isinstance(kw, dict):
                 bad(f"{kw_name} must be a dict or None, got {kw!r}")
+        # buffered scheduler: latency models only make sense there, and
+        # the scheduler itself folds sparse (idx, val) payload stacks
+        # through the staleness buffer — it has no dense/legacy path
+        if self.latency != "none" and self.scheduler != "buffered":
+            bad(f"latency={self.latency!r} models rounds-of-delay for the "
+                "buffered scheduler, but "
+                f"scheduler={self.scheduler!r} folds every payload the "
+                "round it is computed — use scheduler='buffered' or "
+                "latency='none'")
+        if self.scheduler == "buffered":
+            if not self.use_lbgm or self.resolved_lbg_variant not in (
+                    "topk", "topk-sharded"):
+                bad("scheduler='buffered' buffers each client's sparse "
+                    "(idx, val) payload between dispatch and delivery, "
+                    "which needs the top-k LBG store — set use_lbgm=True "
+                    "and lbg_variant='topk' (or 'topk-sharded'), got "
+                    f"use_lbgm={self.use_lbgm} "
+                    f"lbg_variant={self.lbg_variant!r}")
+            if self.fused_kernels is False:
+                bad("scheduler='buffered' requires the sparse aggregation "
+                    "contract; fused_kernels=False selects the legacy "
+                    "dense fold which cannot buffer payloads — leave "
+                    "fused_kernels unset (auto) or True")
+            if self.model_sharding != "replicate":
+                bad("scheduler='buffered' runs the replicated chunked "
+                    "layout; model_sharding="
+                    f"{self.model_sharding!r} needs scheduler='sharded'")
         # registry-keyed fields: fail now, with the registered names in the
         # message, instead of deep inside the engine build
         from repro.fed import registry as reg
@@ -209,6 +247,28 @@ class FLConfig:
         if self.codec not in reg.CODECS:
             bad(f"unknown codec {self.codec!r}; registered "
                 f"codecs: {reg.CODECS.names()}")
+        if self.latency not in reg.LATENCIES:
+            bad(f"unknown latency {self.latency!r}; registered "
+                f"latency models: {reg.LATENCIES.names()}")
+        # *_kw keys checked against the registered component's signature
+        # (or its explicit kw= spec) — a typo'd key fails here with the
+        # valid names, not as a TypeError deep inside the engine build.
+        # valid_kw returns None for unintrospectable factories: skip.
+        for field, kw_name, registry in (
+                ("aggregator", "aggregator_kw", reg.AGGREGATORS),
+                ("attack", "attack_kw", reg.ATTACKS),
+                ("codec", "codec_kw", reg.CODECS),
+                ("latency", "latency_kw", reg.LATENCIES)):
+            comp, kw = getattr(self, field), getattr(self, kw_name)
+            if comp is None or not kw:
+                continue
+            valid = registry.valid_kw(comp)
+            if valid is None:
+                continue
+            unknown = sorted(set(kw) - valid)
+            if unknown:
+                bad(f"{kw_name} keys {unknown} are not accepted by "
+                    f"{field}={comp!r}; valid keys: {sorted(valid)}")
 
     # ------------------------------------------------------------- views
     @property

@@ -1,0 +1,218 @@
+"""Per-client latency / compute-heterogeneity models for ``"buffered"``.
+
+The buffered scheduler (FedBuff-style, see ``repro.fed.engine``) treats a
+slow client as *latency*, not absence: a dispatched payload sits in
+flight for a model-drawn number of rounds and is folded into the global
+update in the round it lands, discounted by a staleness weight. The
+models below supply three pluggable pieces:
+
+* ``sample_delays(rng, K)`` — per-round (K,) integer rounds-of-delay,
+  drawn from the engine's dedicated *fault stream* (see
+  ``repro.fed.attacks.fault_rng``) so clean/synchronous runs stay
+  bit-for-bit untouched and an async run replays exactly under a seed.
+  Models that need no randomness never touch ``rng`` — the stream is
+  only consumed when the model actually draws.
+* ``staleness_weight(s)`` — the server-side discount applied to a
+  payload delivered ``s`` rounds after dispatch. The default is the
+  FedBuff-style polynomial ``1 / (1 + s)**alpha``, gated with
+  ``jnp.where`` so fresh payloads (``s == 0``) keep weight exactly
+  ``1.0`` — that gate is what makes zero-latency buffered runs
+  bit-for-bit equal to the chunked scheduler.
+* ``sample_tau(K, tau)`` — optional per-client local-step budget
+  (compute heterogeneity): slow clients run fewer local SGD steps
+  instead of vanishing. ``None`` (the default) keeps every client at the
+  configured ``tau`` and the engine's homogeneous local-update scan.
+
+Config surface: ``FLConfig.latency`` / ``latency_kw`` (validated at
+construction, JSON round-trips through ``ExperimentSpec`` and the CLI).
+Extend with ``@register_latency``; constructors are introspected by
+``Registry.valid_kw`` so unknown ``latency_kw`` keys fail at FLConfig
+construction with the valid names in the message.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.fed.registry import LATENCIES, register_latency
+
+#: sentinel delay for clients whose payload never arrives (the dropout
+#: arm of the async benchmark) — far beyond any real experiment length
+NEVER = 1 << 30
+
+
+class LatencyModel:
+    """Base: zero delay, polynomial staleness discount, homogeneous tau."""
+
+    def __init__(self, alpha: float = 0.5):
+        if alpha < 0:
+            raise ValueError(f"latency alpha must be >= 0, got {alpha}")
+        self.alpha = float(alpha)
+
+    def setup(self, num_clients: int, seed: int) -> None:
+        """One-time hook (e.g. draw a fixed straggler cohort)."""
+
+    def sample_delays(self, rng: np.random.RandomState,
+                      num_clients: int) -> np.ndarray:
+        """Per-round (K,) integer rounds-of-delay (0 = arrives same
+        round, i.e. synchronous)."""
+        return np.zeros(num_clients, np.int64)
+
+    def staleness_weight(self, s):
+        """Traced discount for a payload ``s`` rounds stale; must return
+        exactly 1.0 at ``s == 0`` (the where-gate guarantees it bit-wise
+        even when ``(1+s)**-alpha`` is not exact on a backend)."""
+        import jax.numpy as jnp
+        return jnp.where(s > 0, (1.0 + s) ** (-self.alpha), 1.0)
+
+    def sample_tau(self, num_clients: int,
+                   tau: int) -> Optional[np.ndarray]:
+        """Optional fixed per-client local-step budget (int32 (K,) in
+        [1, tau]) or None for the homogeneous scan."""
+        return None
+
+
+@register_latency("none")
+class NoLatency(LatencyModel):
+    """Synchronous: every dispatched payload arrives the same round."""
+
+
+@register_latency("fixed")
+class FixedLatency(LatencyModel):
+    """Every client delivers exactly ``delay`` rounds after dispatch —
+    the simplest model, and the one the wire-attribution tests pin."""
+
+    def __init__(self, delay: int = 1, alpha: float = 0.5):
+        super().__init__(alpha)
+        if delay < 0:
+            raise ValueError(f"fixed latency delay must be >= 0, "
+                             f"got {delay}")
+        self.delay = int(delay)
+
+    def sample_delays(self, rng, num_clients):
+        return np.full(num_clients, self.delay, np.int64)
+
+
+@register_latency("uniform")
+class UniformLatency(LatencyModel):
+    """Delay ~ UniformInt[low, high] per client per round."""
+
+    def __init__(self, low: int = 0, high: int = 3, alpha: float = 0.5):
+        super().__init__(alpha)
+        if not 0 <= low <= high:
+            raise ValueError(f"uniform latency needs 0 <= low <= high, "
+                             f"got low={low} high={high}")
+        self.low, self.high = int(low), int(high)
+
+    def sample_delays(self, rng, num_clients):
+        return rng.randint(self.low, self.high + 1,
+                           size=num_clients).astype(np.int64)
+
+
+@register_latency("lognormal")
+class LognormalLatency(LatencyModel):
+    """Delay = floor(scale * LogNormal(0, sigma)), clipped to
+    ``max_delay`` — the heavy-tailed rounds-of-delay shape real federated
+    deployments report (a few very slow devices dominate the tail)."""
+
+    def __init__(self, scale: float = 1.0, sigma: float = 0.75,
+                 max_delay: int = 16, alpha: float = 0.5):
+        super().__init__(alpha)
+        if scale < 0 or sigma < 0 or max_delay < 0:
+            raise ValueError(
+                f"lognormal latency needs scale, sigma, max_delay >= 0, "
+                f"got scale={scale} sigma={sigma} max_delay={max_delay}")
+        self.scale, self.sigma = float(scale), float(sigma)
+        self.max_delay = int(max_delay)
+
+    def sample_delays(self, rng, num_clients):
+        d = np.floor(self.scale * rng.lognormal(
+            0.0, self.sigma, size=num_clients))
+        return np.clip(d, 0, self.max_delay).astype(np.int64)
+
+
+@register_latency("straggler")
+class StragglerLatency(LatencyModel):
+    """A fixed seed-derived cohort of round(frac*K) stragglers.
+
+    Non-cohort clients deliver immediately; cohort clients deliver
+    ``delay`` (+ UniformInt[0, jitter]) rounds late, run ``slow_tau``
+    local steps when set (compute heterogeneity), or — with
+    ``drop=True`` — never deliver at all (delay = :data:`NEVER`), which
+    is exactly the "dropout forfeits the stragglers" baseline arm of
+    ``benchmarks/async_heterogeneity.py``. ``cohort="head"`` pins the
+    cohort to clients ``[0, n)`` instead of a random draw, which under
+    ``partition_label_skew`` concentrates the forfeited label mass and
+    makes the dropout-vs-buffered accuracy gap reproducible.
+    """
+
+    def __init__(self, frac: float = 0.2, delay: int = 4, jitter: int = 0,
+                 slow_tau: Optional[int] = None, drop: bool = False,
+                 cohort: str = "random", alpha: float = 0.5):
+        super().__init__(alpha)
+        if not 0.0 <= frac <= 1.0:
+            raise ValueError(f"straggler frac must be in [0, 1], "
+                             f"got {frac}")
+        if delay < 0 or jitter < 0:
+            raise ValueError(f"straggler delay/jitter must be >= 0, got "
+                             f"delay={delay} jitter={jitter}")
+        if slow_tau is not None and slow_tau < 1:
+            raise ValueError(f"straggler slow_tau must be >= 1, "
+                             f"got {slow_tau}")
+        if cohort not in ("random", "head"):
+            raise ValueError(f"straggler cohort must be 'random' or "
+                             f"'head', got {cohort!r}")
+        self.frac, self.delay, self.jitter = float(frac), int(delay), \
+            int(jitter)
+        self.slow_tau = None if slow_tau is None else int(slow_tau)
+        self.drop = bool(drop)
+        self.cohort = cohort
+        self._slow = None
+
+    def setup(self, num_clients, seed):
+        # same dedicated-stream construction as select_byzantine, offset
+        # so the straggler cohort is independent of the Byzantine one
+        self._slow = np.zeros(num_clients, bool)
+        n = int(round(self.frac * num_clients))
+        if n:
+            if self.cohort == "head":
+                self._slow[:n] = True
+            else:
+                cr = np.random.RandomState(
+                    (seed * 2654435761 + 97) % (2 ** 31))
+                self._slow[cr.choice(num_clients, size=n,
+                                     replace=False)] = True
+
+    def sample_delays(self, rng, num_clients):
+        d = np.zeros(num_clients, np.int64)
+        if self.drop:
+            d[self._slow] = NEVER
+            return d
+        base = np.full(num_clients, self.delay, np.int64)
+        if self.jitter:
+            # draw all K for stream invariance w.r.t. cohort membership
+            base = base + rng.randint(0, self.jitter + 1,
+                                      size=num_clients)
+        d[self._slow] = base[self._slow]
+        return d
+
+    def sample_tau(self, num_clients, tau):
+        if self.slow_tau is None:
+            return None
+        t = np.full(num_clients, tau, np.int32)
+        t[self._slow] = min(self.slow_tau, tau)
+        return t
+
+
+def make_latency(cfg):
+    """Resolve ``cfg.latency`` through the registry and run its one-time
+    ``setup`` (cohort draws etc.) against the config's seed."""
+    try:
+        model = LATENCIES.get(cfg.latency)(**(cfg.latency_kw or {}))
+    except TypeError as e:
+        raise ValueError(
+            f"FLConfig.latency_kw {cfg.latency_kw!r} does not match "
+            f"latency model {cfg.latency!r}: {e}") from e
+    model.setup(cfg.num_clients, cfg.seed)
+    return model

@@ -24,7 +24,8 @@ regardless of import order.
 from __future__ import annotations
 
 import importlib
-from typing import Callable, Dict, Iterable, Optional
+import inspect
+from typing import Callable, Dict, FrozenSet, Iterable, Optional
 
 
 class Registry:
@@ -34,6 +35,7 @@ class Registry:
         self.kind = kind
         self._entries: Dict[str, Callable] = {}
         self._aliases: Dict[str, str] = {}
+        self._kw_specs: Dict[str, FrozenSet[str]] = {}
         self._builtin_modules = tuple(builtin_modules)
         self._loaded_modules: set = set()
 
@@ -50,11 +52,18 @@ class Registry:
 
     # -------------------------------------------------------- registration
     def register(self, name: str, obj: Optional[Callable] = None,
-                 aliases: Iterable[str] = ()):
+                 aliases: Iterable[str] = (),
+                 kw: Optional[Iterable[str]] = None):
         """Register ``obj`` under ``name`` (usable as a decorator).
 
         Duplicate names are an error: silent overwrites are how two
         experiments end up silently running different code under one key.
+
+        ``kw`` optionally declares the keyword names the component's
+        ``*_kw`` config dict accepts — needed when the registered object
+        is a factory (lambda over a cfg) whose signature hides the real
+        constructor. Classes registered directly don't need it:
+        :meth:`valid_kw` introspects their ``__init__``.
         """
         def _add(fn: Callable) -> Callable:
             # validate name AND all aliases before mutating anything, so a
@@ -72,6 +81,8 @@ class Registry:
             self._entries[name] = fn
             for a in aliases:
                 self._aliases[a] = name
+            if kw is not None:
+                self._kw_specs[name] = frozenset(kw)
             return fn
         return _add if obj is None else _add(obj)
 
@@ -90,6 +101,36 @@ class Registry:
         self._ensure_builtins()
         return sorted(self._entries)
 
+    def valid_kw(self, name: str) -> Optional[FrozenSet[str]]:
+        """Keyword names ``name``'s constructor accepts, or None when
+        they can't be known statically (a factory registered without an
+        explicit ``kw=`` spec, or a ``**kwargs`` constructor).
+
+        ``FLConfig`` checks the user's ``*_kw`` dict against this at
+        construction so a typo'd key fails with the valid names in the
+        message instead of a TypeError deep inside the engine build.
+        An explicit ``kw=`` spec always wins over introspection.
+        """
+        self._ensure_builtins()
+        key = self._aliases.get(name, name)
+        if key in self._kw_specs:
+            return self._kw_specs[key]
+        obj = self._entries.get(key)
+        if obj is None or not inspect.isclass(obj):
+            return None
+        init = obj.__init__
+        if init is object.__init__:
+            return frozenset()
+        try:
+            sig = inspect.signature(init)
+        except (TypeError, ValueError):
+            return None
+        params = list(sig.parameters.values())[1:]   # drop self
+        if any(p.kind in (p.VAR_KEYWORD, p.VAR_POSITIONAL)
+               for p in params):
+            return None
+        return frozenset(p.name for p in params)
+
     def __contains__(self, name: str) -> bool:
         self._ensure_builtins()
         return name in self._entries or name in self._aliases
@@ -105,6 +146,7 @@ LBG_STORES = Registry("lbg_store", builtin_modules=("repro.fed.engine",))
 AGGREGATORS = Registry("aggregator", builtin_modules=("repro.fed.robust",))
 ATTACKS = Registry("attack", builtin_modules=("repro.fed.attacks",))
 CODECS = Registry("codec", builtin_modules=("repro.comm.wire",))
+LATENCIES = Registry("latency", builtin_modules=("repro.fed.latency",))
 
 register_model = MODELS.register
 register_dataset = DATASETS.register
@@ -115,3 +157,4 @@ register_lbg_store = LBG_STORES.register
 register_aggregator = AGGREGATORS.register
 register_attack = ATTACKS.register
 register_codec = CODECS.register
+register_latency = LATENCIES.register

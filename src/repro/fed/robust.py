@@ -31,6 +31,14 @@ estimate. All rules are pure ``jnp`` with static shapes (the geometric
 median is a fixed-iteration smoothed Weiszfeld), so they jit and shard
 like the rest of the round function.
 
+Staleness-aware weighting (the ``"buffered"`` scheduler) arrives through
+that same weight vector: the scheduler multiplies each *delivered*
+buffer row's dispatch-round weight by the latency model's discount
+``1/(1+s)^alpha`` before normalizing, so mean, geometric_median and
+scalar_median all downweight stale payloads with zero rule-side code —
+a rule that honors ``w`` is automatically staleness-aware, and
+undelivered buffer rows are ordinary zero-weight clients.
+
 Built-in rules (``repro.fed.registry.AGGREGATORS``; extend with
 ``@register_aggregator``):
 
@@ -351,14 +359,18 @@ class ScalarMedianSparseAggregator:
 
 # ------------------------------------------------------------ registry
 
-register_aggregator("mean", lambda cfg: StreamingMean())
-register_aggregator("trimmed_mean")(
+# kw= declares each rule's aggregator_kw surface (the factories are
+# lambdas over cfg, so Registry.valid_kw can't introspect them) — it is
+# what lets FLConfig reject a typo'd key at construction
+register_aggregator("mean", lambda cfg: StreamingMean(), kw=())
+register_aggregator("trimmed_mean", kw=("beta",))(
     lambda cfg: TrimmedMean(**(cfg.aggregator_kw or {})))
-register_aggregator("coordinate_median", aliases=("median",))(
+register_aggregator("coordinate_median", aliases=("median",), kw=())(
     lambda cfg: CoordinateMedian(**(cfg.aggregator_kw or {})))
-register_aggregator("geometric_median", aliases=("gm",))(
+register_aggregator("geometric_median", aliases=("gm",),
+                    kw=("iters", "eps"))(
     lambda cfg: GeometricMedian(**(cfg.aggregator_kw or {})))
-register_aggregator("scalar_median")(
+register_aggregator("scalar_median", kw=())(
     lambda cfg: ScalarMedian(**(cfg.aggregator_kw or {})))
 
 

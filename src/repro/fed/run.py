@@ -42,6 +42,21 @@ indices — needs the sparse payload path (``fl.lbg_variant=topk`` or
 history as ``wire_bytes`` / ``wire_savings`` (see ``repro.comm.wire``
 for the wire format); ``examples/specs/quantized_lbgm.json`` is a full
 int8 LBGM spec.
+
+Buffered async aggregation (FedBuff-style) rides the same knobs:
+``--set fl.scheduler=buffered --set fl.latency=straggler --set
+"fl.latency_kw={\"frac\": 0.2, \"delay\": 4}"`` treats slow clients as
+*latency* instead of dropout — a dispatched payload sits in flight for a
+model-drawn number of rounds and folds into the global update in its
+arrival round, discounted by ``1/(1+staleness)**alpha``. Latency models:
+``none`` (default; with it, buffered is bit-for-bit the chunked
+scheduler), ``fixed``, ``uniform``, ``lognormal``, ``straggler`` (fixed
+seed-derived slow cohort; ``drop=true`` makes the cohort never deliver —
+the dropout baseline — and ``slow_tau`` gives it a smaller local-step
+budget). Needs the sparse payload path (``fl.lbg_variant=topk`` /
+``topk-sharded``); wire/uplink bytes are attributed to the arrival
+round. ``examples/specs/async_buffered.json`` is a full spec;
+``benchmarks/async_heterogeneity.py`` is the dropout-vs-buffered grid.
 """
 from __future__ import annotations
 

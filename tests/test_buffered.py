@@ -1,0 +1,341 @@
+"""Buffered async scheduler: equivalence, delivery accounting, replay.
+
+Five pillars:
+  (a) the acceptance gate — ``scheduler="buffered"`` with
+      ``latency="none"`` and no dropout is bit-for-bit equal to
+      ``"chunked"`` (history floats AND final params), including under
+      partial sampling + dropout faults, and (slow) across robust rules
+      and a lossy codec,
+  (b) delivery-time accounting — with a fixed 1-round delay every wire
+      byte lands in the arrival round (round 0 ships nothing), the
+      delivered-payload count matches the host plan, and an undeliverable
+      cohort (straggler ``drop=True``) never contributes bytes,
+  (c) latency/staleness replay is seed-deterministic (same seed ->
+      bit-identical history; different seed -> different delivery
+      pattern) and the staleness discount is exactly 1.0 at s=0,
+  (d) the host delivery plan's invariants: one in-flight slot per
+      client, dispatch only when idle, stale = arrival - dispatch round,
+  (e) satellite surfaces — FLConfig kw-key validation against component
+      signatures, buffered-scheduler config rejections, the
+      colluding_sign / adaptive_scaled attack components, and
+      variable-tau compute heterogeneity.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.fed import FLConfig, FLEngine
+from repro.fed.attacks import CSEED_KEY, STALE_KEY, make_attack
+from repro.fed.latency import LATENCIES, NEVER
+from repro.fed.registry import AGGREGATORS
+
+# --------------------------------------------------------------- fixtures
+
+
+@pytest.fixture(scope="module")
+def fcn_setup():
+    from repro.configs import get_config
+    from repro.data.synthetic import mixture_classification
+    from repro.models.smallnets import (apply_fcn, classifier_loss,
+                                        init_fcn)
+    cfg = get_config("paper-fcn")
+    params, _ = init_fcn(jax.random.PRNGKey(0), cfg)
+    x, y = mixture_classification(1200, 10, seed=0)
+    loss_fn = lambda p, b: classifier_loss(apply_fcn, p, cfg,
+                                           b["x"], b["y"])
+    return params, x, y, loss_fn
+
+
+def make_engine(fcn_setup, K=6, **flkw):
+    from repro.fed import partition_label_skew
+    params, x, y, loss_fn = fcn_setup
+    parts = partition_label_skew(y, K, 3, seed=0)
+    data = [{"x": x[p], "y": y[p]} for p in parts]
+    flkw.setdefault("use_lbgm", True)
+    flkw.setdefault("lbg_variant", "topk")
+    flkw.setdefault("lbg_kw", {"k_frac": 0.1})
+    flkw.setdefault("delta_threshold", 0.5)
+    return FLEngine(loss_fn, params, data,
+                    FLConfig(num_clients=K, tau=2, lr=0.05, batch_size=16,
+                             **flkw))
+
+
+def run_rounds(fl, n=3, seed=0):
+    rng = np.random.RandomState(seed)
+    for _ in range(n):
+        fl.run_round(rng)
+    return fl
+
+
+def assert_same_run(a, b):
+    assert len(a.history) == len(b.history)
+    for ra, rb in zip(a.history, b.history):
+        assert set(ra) == set(rb)
+        for k in ra:
+            assert ra[k] == rb[k], (k, ra[k], rb[k])
+    for k in a.params:
+        np.testing.assert_array_equal(np.asarray(a.params[k]),
+                                      np.asarray(b.params[k]), err_msg=k)
+
+
+# ------------------------------------------- (a) zero-latency equivalence
+
+
+def test_zero_latency_bit_for_bit_chunked(fcn_setup):
+    a = run_rounds(make_engine(fcn_setup, scheduler="chunked"))
+    b = run_rounds(make_engine(fcn_setup, scheduler="buffered"))
+    assert_same_run(a, b)
+
+
+def test_zero_latency_with_sampling_and_dropout(fcn_setup):
+    kw = dict(sample_frac=0.7, dropout_frac=0.25)
+    a = run_rounds(make_engine(fcn_setup, scheduler="chunked", **kw), n=4)
+    b = run_rounds(make_engine(fcn_setup, scheduler="buffered", **kw), n=4)
+    assert_same_run(a, b)
+
+
+def test_zero_latency_scalar_median(fcn_setup):
+    kw = dict(aggregator="scalar_median")
+    a = run_rounds(make_engine(fcn_setup, scheduler="chunked", **kw))
+    b = run_rounds(make_engine(fcn_setup, scheduler="buffered", **kw))
+    assert_same_run(a, b)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kw", [dict(aggregator="geometric_median"),
+                                dict(codec="int8"),
+                                dict(aggregator="geometric_median",
+                                     codec="fp8"),
+                                dict(attack="sign_flip", attack_frac=0.34,
+                                     attack_kw={"scale": 4.0})],
+                         ids=["gm", "int8", "gm-fp8", "attacked"])
+def test_zero_latency_equivalence_matrix(fcn_setup, kw):
+    a = run_rounds(make_engine(fcn_setup, scheduler="chunked", **kw), n=4)
+    b = run_rounds(make_engine(fcn_setup, scheduler="buffered", **kw), n=4)
+    assert_same_run(a, b)
+
+
+# --------------------------------------- (b) delivery-time accounting
+
+
+def test_wire_bytes_attributed_to_arrival_round(fcn_setup):
+    # fixed delay=1 and one in-flight slot per client gives a period-2
+    # cycle: dispatch at even rounds, delivery (and all wire bytes) at
+    # odd rounds — round 0 ships nothing
+    fl = run_rounds(make_engine(fcn_setup, scheduler="buffered",
+                                latency="fixed",
+                                latency_kw={"delay": 1}), n=5)
+    wires = [r["wire_bytes"] for r in fl.history]
+    assert fl.history[0]["uplink_floats"] == 0.0
+    assert wires[0::2] == [0.0, 0.0, 0.0]
+    assert all(w > 0 for w in wires[1::2])
+    K = fl.cfg.num_clients
+    assert fl.n_delivered == K * 2  # delivery rounds 1 and 3
+    assert fl.ledger.wire_bytes == sum(wires)
+
+
+def test_dropped_cohort_never_delivers(fcn_setup):
+    fl = run_rounds(make_engine(
+        fcn_setup, scheduler="buffered", latency="straggler",
+        latency_kw={"frac": 0.5, "drop": True, "cohort": "head"}), n=4)
+    K = fl.cfg.num_clients
+    # head cohort [0, K/2) dispatches once and never delivers; the rest
+    # deliver every round
+    assert fl.n_delivered == (K // 2) * 4
+    assert (fl._arrival[:K // 2] > 4).all()       # still in flight
+    assert (fl._arrival[K // 2:] == -1).all()     # idle
+
+
+# ----------------------------------------------- (c) replay determinism
+
+
+def test_latency_replay_is_seed_deterministic(fcn_setup):
+    kw = dict(scheduler="buffered", latency="lognormal",
+              latency_kw={"scale": 1.0, "sigma": 0.75, "max_delay": 4},
+              sample_frac=0.8, dropout_frac=0.1)
+    a = run_rounds(make_engine(fcn_setup, **kw), n=5)
+    b = run_rounds(make_engine(fcn_setup, **kw), n=5)
+    assert_same_run(a, b)
+    c = run_rounds(make_engine(fcn_setup, seed=7, **kw), n=5, seed=7)
+    assert [r["wire_bytes"] for r in c.history] != \
+        [r["wire_bytes"] for r in a.history]
+
+
+def test_staleness_weight_exact_one_when_fresh():
+    for name in LATENCIES.names():
+        m = LATENCIES.get(name)()
+        w = np.asarray(m.staleness_weight(jnp.zeros(3, jnp.float32)))
+        assert (w == 1.0).all(), name
+        # monotone non-increasing in staleness
+        ws = np.asarray(m.staleness_weight(
+            jnp.arange(5, dtype=jnp.float32)))
+        assert (np.diff(ws) <= 0).all(), name
+
+
+# ------------------------------------------------- (d) host plan logic
+
+
+def test_delivery_plan_one_in_flight_slot(fcn_setup):
+    fl = make_engine(fcn_setup, scheduler="buffered", latency="fixed",
+                     latency_kw={"delay": 2})
+    rng = np.random.RandomState(0)
+    plans = []
+    for _ in range(6):
+        fl._sample_batches(rng)
+        plans.append(fl._sample_mask(rng))
+    # round 0: everyone idle -> all dispatch, nothing delivers
+    assert plans[0]["dispatch"].all() and not plans[0]["deliver"].any()
+    # rounds 1: all in flight -> no dispatch, no delivery yet
+    assert not plans[1]["dispatch"].any()
+    assert not plans[1]["deliver"].any()
+    # round 2: delay-2 payloads land, stale == 2; dispatch is gated on
+    # the slot being idle *at the top of the round*, so the re-dispatch
+    # happens one round after delivery
+    assert plans[2]["deliver"].all()
+    assert (plans[2]["stale"] == 2.0).all()
+    assert not plans[2]["dispatch"].any()
+    assert plans[3]["dispatch"].all() and not plans[3]["deliver"].any()
+    # never dispatch while a payload is in flight
+    in_flight = np.zeros(fl.cfg.num_clients, bool)
+    for p in plans:
+        assert not (p["dispatch"].astype(bool) & in_flight).any()
+        in_flight |= p["dispatch"].astype(bool)
+        in_flight &= ~p["deliver"].astype(bool)
+
+
+def test_latency_model_sample_shapes():
+    for name in LATENCIES.names():
+        m = LATENCIES.get(name)()
+        m.setup(8, seed=0)
+        d = m.sample_delays(np.random.RandomState(0), 8)
+        assert d.shape == (8,) and d.dtype.kind == "i" and (d >= 0).all()
+
+
+def test_straggler_drop_uses_never_sentinel():
+    m = LATENCIES.get("straggler")(frac=0.5, drop=True, cohort="head")
+    m.setup(4, seed=0)
+    d = m.sample_delays(np.random.RandomState(0), 4)
+    assert list(d) == [NEVER, NEVER, 0, 0]
+
+
+# --------------------------------------------- (e) satellite surfaces
+
+
+@pytest.mark.parametrize("kwargs,frag", [
+    (dict(attack="gaussian", attack_frac=0.2, attack_kw={"sgima": 2.0}),
+     "sigma"),
+    (dict(aggregator="geometric_median", aggregator_kw={"iter": 5}),
+     "iters"),
+    (dict(codec="int8", codec_kw={"stochastc": False}), "stochastic"),
+    (dict(scheduler="buffered", use_lbgm=True, lbg_variant="topk",
+          lbg_kw={"k_frac": 0.1}, latency="straggler",
+          latency_kw={"fraction": 0.2}), "frac"),
+], ids=["attack", "aggregator", "codec", "latency"])
+def test_kw_keys_validated_at_construction(kwargs, frag):
+    with pytest.raises(ValueError, match="valid keys") as exc:
+        FLConfig(**kwargs)
+    assert frag in str(exc.value)
+
+
+def test_kw_validation_accepts_valid_keys():
+    FLConfig(aggregator="geometric_median", aggregator_kw={"iters": 4})
+    FLConfig(attack="gaussian", attack_frac=0.2, attack_kw={"sigma": 2.0})
+    FLConfig(scheduler="buffered", use_lbgm=True, lbg_variant="topk",
+             lbg_kw={"k_frac": 0.1}, latency="straggler",
+             latency_kw={"frac": 0.2, "delay": 3, "alpha": 1.0})
+
+
+def test_valid_kw_introspection():
+    assert AGGREGATORS.valid_kw("geometric_median") == {"iters", "eps"}
+    assert AGGREGATORS.valid_kw("mean") == frozenset()
+    assert LATENCIES.valid_kw("straggler") >= {"frac", "delay", "drop"}
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(scheduler="buffered", use_lbgm=True, lbg_variant="dense"),
+    dict(scheduler="buffered", use_lbgm=False),
+    dict(scheduler="buffered", use_lbgm=True, lbg_variant="topk",
+         fused_kernels=False),
+    dict(scheduler="chunked", latency="fixed"),
+    dict(latency="nope"),
+], ids=["dense-bank", "no-lbgm", "no-fused", "latency-needs-buffered",
+        "unknown-latency"])
+def test_buffered_config_rejections(kwargs):
+    with pytest.raises(ValueError, match="FLConfig"):
+        FLConfig(**kwargs)
+
+
+def _toy_asg(seed=0):
+    r = np.random.RandomState(seed)
+    return {"w": jnp.asarray(r.randn(4, 3), jnp.float32),
+            "b": jnp.asarray(r.randn(5), jnp.float32)}
+
+
+def test_colluding_sign_shares_one_direction():
+    atk = make_attack(FLConfig(attack="colluding_sign", attack_frac=0.5,
+                               attack_kw={"scale": 2.0}))
+    extras = {CSEED_KEY: jnp.uint32(123)}
+    a = atk._corrupt(_toy_asg(0), extras)
+    b = atk._corrupt(_toy_asg(1), extras)
+    # both clients' corrupted updates are parallel (same unit direction,
+    # scaled by each client's own norm)
+    va = np.concatenate([np.asarray(a[k]).ravel() for k in sorted(a)])
+    vb = np.concatenate([np.asarray(b[k]).ravel() for k in sorted(b)])
+    cos = va @ vb / (np.linalg.norm(va) * np.linalg.norm(vb))
+    np.testing.assert_allclose(cos, 1.0, atol=1e-5)
+    # magnitude = scale * ||g||
+    g = _toy_asg(0)
+    gn = np.sqrt(sum(float(jnp.sum(jnp.square(x))) for x in g.values()))
+    np.testing.assert_allclose(np.linalg.norm(va), 2.0 * gn, rtol=1e-5)
+    # a different round seed picks a different direction
+    c = atk._corrupt(_toy_asg(0), {CSEED_KEY: jnp.uint32(124)})
+    vc = np.concatenate([np.asarray(c[k]).ravel() for k in sorted(c)])
+    assert abs(va @ vc / (np.linalg.norm(va) * np.linalg.norm(vc))) < 0.9
+
+
+def test_adaptive_scaled_cancels_staleness_discount():
+    atk = make_attack(FLConfig(attack="adaptive_scaled", attack_frac=0.5,
+                               attack_kw={"scale": 3.0, "alpha": 0.5}))
+    g = _toy_asg(0)
+    fresh = atk._corrupt(g, {})
+    for k in g:
+        np.testing.assert_allclose(np.asarray(fresh[k]),
+                                   -3.0 * np.asarray(g[k]), rtol=1e-6)
+    stale = atk._corrupt(g, {STALE_KEY: jnp.float32(3.0)})
+    for k in g:
+        np.testing.assert_allclose(
+            np.asarray(stale[k]),
+            -3.0 * 2.0 * np.asarray(g[k]), rtol=1e-5)  # (1+3)^0.5 = 2
+
+
+def test_variable_tau_heterogeneity(fcn_setup):
+    base = dict(scheduler="buffered", latency="straggler")
+    # slow_tau == tau: the masked scan is a no-op mask -> histories agree
+    a = run_rounds(make_engine(fcn_setup, **base,
+                               latency_kw={"frac": 0.5, "delay": 1}))
+    b = run_rounds(make_engine(fcn_setup, **base,
+                               latency_kw={"frac": 0.5, "delay": 1,
+                                           "slow_tau": 2}))
+    for ra, rb in zip(a.history, b.history):
+        np.testing.assert_allclose(ra["loss"], rb["loss"], rtol=1e-5)
+    # slow_tau < tau changes the slow cohort's updates
+    c = run_rounds(make_engine(fcn_setup, **base,
+                               latency_kw={"frac": 0.5, "delay": 1,
+                                           "slow_tau": 1}))
+    assert [r["loss"] for r in c.history] != [r["loss"] for r in a.history]
+    # and is itself seed-deterministic
+    d = run_rounds(make_engine(fcn_setup, **base,
+                               latency_kw={"frac": 0.5, "delay": 1,
+                                           "slow_tau": 1}))
+    assert_same_run(c, d)
+
+
+def test_buffered_spec_json_round_trip():
+    cfg = FLConfig(scheduler="buffered", use_lbgm=True,
+                   lbg_variant="topk",
+                   lbg_kw={"k_frac": 0.1}, latency="straggler",
+                   latency_kw={"frac": 0.2, "delay": 4},
+                   aggregator="geometric_median")
+    assert FLConfig.from_dict(cfg.to_dict()) == cfg
