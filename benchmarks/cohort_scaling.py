@@ -31,8 +31,17 @@ the ``"lm"`` component on one ``model > 1`` mesh shape under
 vs tensor-parallel along the model axis), reporting us/round and the
 XLA-reported per-device temp bytes of the whole round.
 
-Every row emitted by this module carries
-``mesh``/``mesh_shape``/``fused_kernels``/``model_sharding`` metadata
+The ``host_stream`` section is the ISSUE-10 acceptance measurement: the
+same chunked experiment under the in-memory ``topk`` store vs the
+out-of-core ``topk-host`` store (banks host-resident, streamed per chunk
+on the background thread), reporting us/round plus the streamed-chunk
+device bytes — the fixed per-round device bank footprint that holds
+whatever K is. The ``tiered`` section runs the hierarchical
+edge->region->global aggregation (``FLConfig.tiers``) and emits the
+ledger's per-tier wire-byte attribution alongside us/round.
+
+Every row emitted by this module carries ``mesh``/``mesh_shape``/
+``fused_kernels``/``model_sharding``/``lbg_store``/``tiers`` metadata
 (``common.spec_metadata``) so rows from different PRs are attributable
 to the execution path that produced them.
 """
@@ -52,7 +61,8 @@ def run(rounds: int = 3, cohorts=(32, 128), chunk_size: int = 8,
         scalar_cohorts=(128,), scalar_rounds: int = 6,
         scalar_warmup: int = 2, scalar_d_model: int = 512,
         scalar_chunk: int = 16, scalar_k_frac: float = 0.01,
-        mesh_cohorts=(32,)) -> None:
+        mesh_cohorts=(32,), host_cohorts=(256,),
+        tier_levels=(8, 2)) -> None:
     import jax
 
     from repro.fed import run_experiment
@@ -80,6 +90,86 @@ def run(rounds: int = 3, cohorts=(32, 128), chunk_size: int = 8,
         mesh_shape_sweep(K, scalar_chunk, scalar_rounds, scalar_warmup,
                          scalar_d_model, n_dev, k_frac=scalar_k_frac)
     lm_model_sharding_comparison(scalar_rounds, scalar_warmup, n_dev)
+    for K in host_cohorts:
+        host_stream_comparison(K, chunk_size, rounds, warmup=2)
+        tiered_aggregation(K, chunk_size, rounds, warmup=2,
+                           levels=tier_levels)
+
+
+def host_stream_comparison(K: int, chunk_size: int, rounds: int,
+                           warmup: int) -> None:
+    """In-memory ``topk`` vs out-of-core ``topk-host`` on the identical
+    chunked experiment (histories are bit-for-bit equal — tier-1 tested
+    — so the delta is pure execution cost). The topk-host row's derived
+    field carries ``chunk_bytes``: the streamed bank chunk's device
+    bytes, the whole per-round device bank footprint (x2 for the double
+    buffer) at ANY cohort size."""
+    import numpy as np
+
+    from repro.fed.experiment import build_experiment
+
+    for store in ("topk", "topk-host"):
+        spec = build_spec(
+            num_clients=K, n_data=4 * K * 8, tau=1, batch_size=8,
+            name=f"host-{store}-K{K}", scheduler="chunked",
+            chunk_size=chunk_size, use_lbgm=True, delta_threshold=0.2,
+            lbg_variant=store, lbg_kw={"k_frac": 0.1})
+        engine, _ = build_experiment(spec)
+        rng = np.random.RandomState(spec.fl.seed + 1)
+        src = engine.prefetcher(rng)
+        try:
+            for _ in range(warmup):
+                engine.run_round(src)
+            t0 = time.time()
+            for _ in range(rounds):
+                engine.run_round(src)
+            us = (time.time() - t0) / rounds * 1e6
+        finally:
+            src.close()
+        extra = {}
+        derived = f"K={K};chunk={engine._chunk}"
+        if store == "topk-host":
+            extra["chunk_bytes"] = engine.host_chunk_device_bytes()
+            derived += f";chunk_bytes={extra['chunk_bytes']}"
+        emit(f"cohort_scaling/host_stream/{store}/K{K}", us, derived,
+             K=K, **extra, **spec_metadata(spec))
+
+
+def tiered_aggregation(K: int, chunk_size: int, rounds: int, warmup: int,
+                       levels=(8, 2)) -> None:
+    """Hierarchical edge->region->global fold (bit-for-bit the flat
+    history) with the ledger's per-tier wire attribution in the row:
+    edge links carry the real sparse payload bytes, each active
+    edge/region ships one dense fp32 partial carry upstream."""
+    import numpy as np
+
+    from repro.fed.experiment import build_experiment
+
+    levels = [int(n) for n in levels if int(n) >= 1]
+    levels = [min(n, K) for n in levels]
+    spec = build_spec(
+        num_clients=K, n_data=4 * K * 8, tau=1, batch_size=8,
+        name=f"tiered-{'x'.join(map(str, levels))}-K{K}",
+        scheduler="chunked", chunk_size=chunk_size, use_lbgm=True,
+        delta_threshold=0.2, lbg_variant="topk",
+        lbg_kw={"k_frac": 0.1}, tiers=levels)
+    engine, _ = build_experiment(spec)
+    rng = np.random.RandomState(spec.fl.seed + 1)
+    src = engine.prefetcher(rng)
+    try:
+        for _ in range(warmup):
+            engine.run_round(src)
+        t0 = time.time()
+        for _ in range(rounds):
+            engine.run_round(src)
+        us = (time.time() - t0) / rounds * 1e6
+    finally:
+        src.close()
+    tb = {f"tier_{k}_bytes": v
+          for k, v in engine.ledger.tier_wire_bytes.items()}
+    emit(f"cohort_scaling/tiered/{'x'.join(map(str, levels))}/K{K}", us,
+         ";".join([f"K={K}"] + [f"{k}={v:.0f}" for k, v in tb.items()]),
+         K=K, **tb, **spec_metadata(spec))
 
 
 def mesh_shape_sweep(K: int, chunk_size: int, rounds: int, warmup: int,

@@ -91,6 +91,8 @@ def spec_metadata(spec) -> Dict[str, Any]:
         "codec_kw": fl.codec_kw,
         "latency": fl.latency,
         "latency_kw": fl.latency_kw,
+        "lbg_store": fl.resolved_lbg_variant if fl.use_lbgm else None,
+        "tiers": fl.tiers,
     }
 
 

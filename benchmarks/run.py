@@ -56,7 +56,8 @@ def main() -> None:
             cohort_scaling.run(rounds=2, cohorts=(8,), chunk_size=4,
                                scalar_cohorts=(8,), scalar_rounds=2,
                                scalar_warmup=2, scalar_d_model=64,
-                               mesh_cohorts=(8,))
+                               mesh_cohorts=(8,), host_cohorts=(16,),
+                               tier_levels=(4, 2))
         else:
             cohort_scaling.run(rounds=min(args.rounds, 5))
     if on("robustness"):

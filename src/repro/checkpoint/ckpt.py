@@ -21,7 +21,10 @@ def _flatten(tree, prefix=""):
         for i, v in enumerate(tree):
             out.update(_flatten(v, f"{prefix}#{i}{_SEP}"))
     else:
-        out[prefix.rstrip(_SEP[-1]).removesuffix(_SEP)] = tree
+        # exactly one trailing separator comes off — rstrip(":") would eat
+        # every trailing colon and corrupt leaf keys that legitimately end
+        # with one (regression-tested in tests/test_ckpt.py)
+        out[prefix.removesuffix(_SEP)] = tree
     return out
 
 

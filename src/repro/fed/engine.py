@@ -139,6 +139,32 @@ declarative ``ExperimentSpec`` API builds on):
      accept/recycle decision reuses ``topk_step_core`` through
      ``repro.core.lbgm_sharded.make_local_topk_step`` — fully
      device-local, so LBGM adds zero cross-device traffic.
+   * ``HostTopKLBGStore`` (``"topk-host"``) — the top-K bank kept
+     host-resident as NumPy: ``run_round`` switches to an out-of-core
+     chunk loop where a ``_HostBankStreamer`` daemon thread uploads
+     chunk c+1's bank/batch rows while the device computes chunk c and
+     writes the updated rows back on the same thread. Per-round device
+     bank bytes are O(chunk·k_frac·M) regardless of K — 100k-client
+     cohorts on fixed device memory, bit-for-bit equal to ``"topk"``.
+
+   **Hierarchical tiers** (``FLConfig.tiers`` — ``repro.fed.hierarchy``)
+   interpose edge->region->global aggregation behind the aggregator
+   seam: a ``HierarchicalAggregator`` folds per-edge partial carries
+   alongside the inner streaming aggregator's untouched flat carry (so
+   the global update stays bit-for-bit the flat fold), and the
+   CommLedger attributes per-tier wire bytes (edge links carry the
+   sparse client payloads; each active edge/region forwards one dense
+   partial-carry model upstream). Collect-mode robust rules keep their
+   flat numerics — for them the tier map is accounting-only.
+
+   **Checkpointing** (``FLConfig.ckpt_every`` / ``ckpt_path`` —
+   ``repro.checkpoint.ckpt``): every N completed rounds the engine
+   atomically persists params, banks, residuals, the buffered in-flight
+   slots, all host rng streams, and the CommLedger;
+   ``FLEngine.run(resume=True)`` / ``repro.fed.run --resume`` continue
+   the run bit-for-bit (the prefetch producer snapshots its post-draw
+   host state with every round, so the checkpoint cut is exact even
+   with rounds queued ahead).
 
    A store implements ``init(params, K)``, ``client_step(grad, lbg_k)`` and
    ``full_round_cost(base_cost, stats)``; new storage schemes (e.g.
@@ -174,6 +200,7 @@ from __future__ import annotations
 import queue
 import threading
 import warnings
+import weakref
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -181,6 +208,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.checkpoint import ckpt as ckpt_lib
 from repro.comm.accounting import CommLedger
 from repro.comm.wire import WIRE_KEY, codec_rng, make_codec
 from repro.compression import make_uplink_pipeline
@@ -193,6 +221,7 @@ from repro.core.tree_math import tree_size, tree_zeros_like
 from repro.fed.attacks import (BYZ_KEY, STALE_KEY, fault_rng, make_attack,
                                select_byzantine)
 from repro.fed.flconfig import FLConfig  # noqa: F401  (re-export)
+from repro.fed.hierarchy import HierarchicalAggregator, make_tier_map
 from repro.fed.latency import make_latency
 from repro.fed.registry import (LBG_STORES, SCHEDULERS, register_lbg_store,
                                 register_scheduler)
@@ -375,6 +404,39 @@ class ShardedTopKLBGStore(TopKLBGStore):
         return bank_model_partition(params, self.k_frac, self.n_model)
 
 
+class HostTopKLBGStore(TopKLBGStore):
+    """Sparse (idx, val) bank kept host-resident (``"topk-host"``).
+
+    Same decision math, cost model, and aggregator as
+    :class:`TopKLBGStore` — the per-client step is *bit-for-bit* the
+    in-memory store's — but ``init`` allocates the (Kp, nb, kb) bank as
+    NumPy on the host instead of a device array. The engine detects
+    ``host_resident`` and switches ``run_round`` into the out-of-core
+    chunk loop: a :class:`_HostBankStreamer` daemon thread uploads chunk
+    ``c+1``'s bank rows (and batch rows) host->device while the device
+    computes chunk ``c``, and writes chunk ``c``'s updated rows back to
+    the host array on the same thread — so per-round *device* bank bytes
+    are O(chunk * k_frac * M) regardless of K. That is what unlocks
+    100k-client cohorts on a fixed-memory device (ROADMAP open item 2);
+    the chunked scheduler's in-memory path keeps the whole O(K * k_frac
+    * M) bank live on device.
+
+    Requires ``scheduler="chunked"`` with streaming aggregation and no
+    error-feedback residual (validated at FLConfig construction / engine
+    build); histories are bit-for-bit equal to ``"topk"`` on the same
+    seed (tier-1 tested).
+    """
+
+    #: engine marker: run_round streams bank chunks from host memory
+    host_resident = True
+
+    def init(self, params, num_clients: int):
+        proto = lbgm_lib.init_topk_lbg(params, self.k_frac)
+        return jax.tree.map(
+            lambda x: np.zeros((num_clients,) + tuple(x.shape),
+                               np.dtype(x.dtype)), proto)
+
+
 def _lbg_kw(cfg: FLConfig) -> dict:
     """User lbg_kw with an actionable error for engine-reserved keys
     (a raw collision would surface as a cryptic TypeError from the store
@@ -406,6 +468,10 @@ register_lbg_store("topk-sharded")(
                                     fused=resolve_fused_kernels(cfg),
                                     n_model=cfg.mesh_model_dim,
                                     **_lbg_kw(cfg)))
+register_lbg_store("topk-host")(
+    lambda cfg: HostTopKLBGStore(cfg.delta_threshold,
+                                 fused=resolve_fused_kernels(cfg),
+                                 **_lbg_kw(cfg)))
 
 
 def make_lbg_store(cfg: FLConfig):
@@ -1287,6 +1353,9 @@ class FLEngine:
             {k: v[off:off + n] for k, v in self._data_cat.items()}
             for off, n in zip(self._data_offsets, self._data_sizes)]
         self.store = make_lbg_store(flcfg)
+        #: "topk-host": the LBG bank lives in host memory and run_round
+        #: streams it chunk-wise (see HostTopKLBGStore / _HostBankStreamer)
+        self._host_bank = bool(getattr(self.store, "host_resident", False))
         # wire codec (repro.comm.wire): payload encoding + real-byte
         # accounting. Its per-client seeds come from a dedicated stream —
         # drawn only when the codec is stochastic, so codec="none" leaves
@@ -1297,6 +1366,27 @@ class FLEngine:
         # store supports it and fused_kernels is not explicitly False
         self.agg, self._sparse_agg = make_aggregator(flcfg, self.store,
                                                      params, self.codec)
+        # hierarchical tiers (FLConfig.tiers — repro.fed.hierarchy): wrap
+        # the streaming aggregator so per-edge partial carries fold
+        # alongside the untouched flat carry (finalize stays bit-for-bit
+        # the flat fold). Collect-mode rules and lossy-codec payloads
+        # cannot decompose over partials — for them the tier map is
+        # accounting-only (per-tier ledger rows, identical numerics).
+        self.tiers = make_tier_map(flcfg)
+        self._tiered_fold = False
+        if self.tiers is not None and type(self.agg) in (
+                SparseTopKAggregator, DenseAggregator):
+            self.agg = HierarchicalAggregator(
+                self.agg, self.tiers.edge_ids_padded(K + self._pad),
+                self.tiers.n_edges)
+            self._tiered_fold = True
+        if self._host_bank and getattr(self.agg, "collect", False):
+            raise ValueError(
+                f"lbg_variant='topk-host' streams bank chunks and folds "
+                f"payloads as they arrive, but aggregator="
+                f"{flcfg.aggregator!r} runs in collect mode (a full "
+                "(K, payload) device stack — exactly the O(K) memory the "
+                "host store exists to avoid); use aggregator='mean'")
         if self.codec.lossy and not (
                 self._sparse_agg or isinstance(self.store, NullLBGStore)):
             raise ValueError(
@@ -1362,15 +1452,38 @@ class FLEngine:
             self.residual = self.sched.layout_banks(self.residual)
         if self._latency is not None:
             self._buffer = self._init_buffer(params, Kp)
-        # donate the LBG/residual banks (and the staleness buffer): the
-        # round's new state reuses the old buffers instead of allocating
-        # a second O(K·M) copy
-        donate = (1, 2, 3) if self._latency is not None else (1, 2)
-        self._round = jax.jit(self._build_round(), donate_argnums=donate)
+        if self._host_bank:
+            # out-of-core round: one jit'd chunk step (banks/batches
+            # arrive per chunk from the streamer thread, donated so the
+            # updated chunk reuses the uploaded buffer) + tiny jit'd
+            # weight-prep / finalize helpers replicating round_fn's exact
+            # expressions. No whole-round jit exists on this path.
+            self._round = None
+            self._chunk_fn = jax.jit(self._build_host_chunk_fn(),
+                                     donate_argnums=(1, 2))
+            self._host_prep = jax.jit(self._build_host_prep())
+            self._host_final = jax.jit(self._build_host_final())
+            self._streamer = _HostBankStreamer(self.lbg, self._chunk)
+            # the daemon thread parks on its task queue; close it when
+            # the engine is collected so tests building many engines do
+            # not leak threads (the finalizer holds only the streamer)
+            self._streamer_finalizer = weakref.finalize(
+                self, self._streamer.close)
+        else:
+            # donate the LBG/residual banks (and the staleness buffer):
+            # the round's new state reuses the old buffers instead of
+            # allocating a second O(K·M) copy
+            donate = (1, 2, 3) if self._latency is not None else (1, 2)
+            self._round = jax.jit(self._build_round(),
+                                  donate_argnums=donate)
         # uplink accounting lives in one place (repro.comm.accounting);
         # run_round records into it and history fields derive from it
         self.ledger = CommLedger()
         self.history: List[Dict[str, float]] = []
+        #: post-round host-side state snapshot (rng streams + buffered
+        #: delivery plan), captured by whichever thread draws the round —
+        #: the consistency cut save_checkpoint persists (see there)
+        self._host_snapshot: Optional[dict] = None
 
     # -------------------------------------------------------------- build
     def _setup_model_sharding(self, params, model_axes):
@@ -1667,6 +1780,116 @@ class FLEngine:
 
         return round_fn
 
+    # ------------------------------------------------ out-of-core (host)
+    def _build_host_chunk_fn(self):
+        """One chunk of the topk-host round — the body is op-for-op
+        :class:`ChunkedScheduler`'s ``chunk_body`` (vmap'd client_fn,
+        the aggregator's sequential accumulate, ``_keep_sampled`` bank
+        gating), compiled standalone so the only device-resident bank
+        state is the active chunk's rows. ``acc`` and ``lbg_c`` are
+        donated: the updated chunk reuses the uploaded buffer."""
+        client_fn = self._build_client_fn()
+        agg = self.agg
+
+        def chunk_fn(params, acc, lbg_c, resid_c, b_c, w_c, m_c):
+            gt, nl, nr, loss, uplink, scalar, wire = jax.vmap(
+                lambda b, l, r: client_fn(params, b, l, r))(
+                    b_c, lbg_c, resid_c)
+            acc = agg.accumulate(acc, w_c, gt)
+            nl = _keep_sampled(m_c, nl, lbg_c)
+            return acc, nl, loss, uplink, scalar, wire
+
+        return chunk_fn
+
+    def _build_host_prep(self):
+        """Round weights for the host chunk loop — the same expressions
+        (and therefore float rounding) as ``round_fn`` + the chunked
+        scheduler's zero-padding."""
+        weights = self.weights
+        pad, chunk = self._pad, self._chunk
+
+        def prep(mask):
+            maskf = mask.astype(jnp.float32)
+            w = weights * maskf
+            w = w / jnp.maximum(jnp.sum(w), 1e-12)
+            wp, mp = w, maskf
+            if pad:
+                wp = jnp.concatenate([w, jnp.zeros(pad, w.dtype)])
+                mp = jnp.concatenate([maskf, jnp.zeros(pad, maskf.dtype)])
+            n_chunks = wp.shape[0] // chunk
+            return (wp.reshape(n_chunks, chunk),
+                    mp.reshape(n_chunks, chunk), w, maskf)
+
+        return prep
+
+    def _build_host_final(self):
+        """Params update + round metrics — ``round_fn``'s exact
+        expressions over the concatenated per-chunk outputs."""
+        cfg = self.cfg
+        agg = self.agg
+
+        def final(params, acc, losses, uplink, scalar, wire, w, maskf):
+            out = agg.finalize(acc)
+            new_params = jax.tree.map(
+                lambda p, a: p - cfg.lr * a.astype(p.dtype), params, out)
+            metrics = {
+                "loss": jnp.sum(losses * w),
+                "uplink_floats": jnp.sum(uplink * maskf),
+                "frac_scalar": jnp.sum(scalar.astype(jnp.float32) * maskf)
+                / jnp.maximum(jnp.sum(maskf), 1.0),
+                "wire_bytes": jnp.sum(wire * maskf),
+            }
+            return new_params, metrics
+
+        return final
+
+    def _run_host_round(self, batch, mask):
+        """The topk-host round loop: double-buffered bank streaming.
+
+        The streamer thread uploads chunk ``c+1``'s bank + batch rows
+        while the device computes chunk ``c`` (dispatch is async — the
+        jit call returns before compute finishes), and the same thread
+        writes chunk ``c``'s updated rows back to the host array (its
+        ``np.asarray`` is what synchronizes on the chunk's compute).
+        Device bank footprint: the in-flight chunks only — independent
+        of K.
+        """
+        K = self.cfg.num_clients
+        n_chunks = (K + self._pad) // self._chunk
+        w_cs, m_cs, w, maskf = self._host_prep(
+            jnp.asarray(mask, jnp.float32))
+        acc = self.agg.init(self.params)
+        st = self._streamer
+        st.begin_round(batch, n_chunks)
+        outs = []
+        try:
+            for c in range(n_chunks):
+                lbg_c, b_c = st.get(c)
+                acc, nl, loss, uplink, scalar, wire = self._chunk_fn(
+                    self.params, acc, lbg_c, {}, b_c, w_cs[c], m_cs[c])
+                st.put_writeback(c, nl)
+                st.request(c + 2)
+                outs.append((loss, uplink, scalar, wire))
+        finally:
+            # barrier: every write-back has landed, so self.lbg (the
+            # host array) is the post-round bank when this returns
+            st.finish_round()
+        cat = lambda xs: jnp.concatenate(list(xs))[:K]
+        loss, uplink, scalar, wire = (cat(x) for x in zip(*outs))
+        self.params, metrics = self._host_final(
+            self.params, acc, loss, uplink, scalar, wire, w, maskf)
+        return metrics
+
+    def host_chunk_device_bytes(self) -> int:
+        """Device bytes one streamed bank chunk occupies — the per-round
+        device bank envelope is ~2x this (double buffer), independent of
+        ``num_clients``."""
+        if not self._host_bank:
+            raise ValueError("host_chunk_device_bytes: engine does not "
+                             "run the topk-host store")
+        return int(sum(v.nbytes // v.shape[0]
+                       for v in jax.tree.leaves(self.lbg)) * self._chunk)
+
     # -------------------------------------------------------------- data
     def _sample_batches(self, rng: np.random.RandomState):
         """Per-round client batches, laid out by the scheduler's
@@ -1721,6 +1944,12 @@ class FLEngine:
             if self._tau_vec is not None:
                 stacked[TAU_KEY] = np.asarray(self._tau_vec, np.int32)
         stacked = self.sched.prepare_batch(stacked)
+        if self._host_bank:
+            # out-of-core path: batches stay host-side — the bank
+            # streamer uploads each chunk's rows next to its bank rows,
+            # so device batch bytes are O(chunk), K-independent, and the
+            # prefetch thread never stages an O(K) H2D transfer
+            return {k: np.asarray(v) for k, v in stacked.items()}
         return {k: jnp.asarray(v) for k, v in stacked.items()}
 
     def _sample_mask(self, rng: np.random.RandomState) -> np.ndarray:
@@ -1775,6 +2004,18 @@ class FLEngine:
             d = np.asarray(self._latency.sample_delays(
                 self._fault_rng, self.cfg.num_clients), np.int64)
         self._pending_delays = None
+        # max-staleness eviction (latency_kw={"max_staleness": s}): an
+        # in-flight payload older than s rounds is dropped — its slot
+        # frees up and the client may re-dispatch THIS round (the only
+        # exit for a straggler drop=True payload parked at NEVER). Pure
+        # host bookkeeping; the count lands in CommLedger.n_evicted.
+        n_evicted = 0
+        s_max = self._latency.max_staleness
+        if s_max is not None:
+            evict = (self._arrival >= 0) & \
+                (t - self._dispatch_round > s_max)
+            n_evicted = int(evict.sum())
+            self._arrival[evict] = -1
         dispatch = (mask > 0) & (self._arrival < 0)
         self._dispatch_round[dispatch] = t
         self._arrival[dispatch] = t + d[dispatch]
@@ -1784,7 +2025,8 @@ class FLEngine:
         return {"mask": mask,
                 "dispatch": dispatch.astype(np.float64),
                 "deliver": deliver.astype(np.float64),
-                "stale": stale.astype(np.float64)}
+                "stale": stale.astype(np.float64),
+                "n_evicted": float(n_evicted)}
 
     # -------------------------------------------------------------- run
     def prefetcher(self, rng: np.random.RandomState,
@@ -1804,10 +2046,17 @@ class FLEngine:
         (synchronous host prep) or a :class:`RoundPrefetcher` (batches and
         mask already staged by the prefetch thread — same draw stream)."""
         if isinstance(rng, RoundPrefetcher):
-            batch, mask = rng.next()
+            # the producer thread snapshots its post-draw host state with
+            # every item (see _capture_host_state) — holding it here
+            # means save_checkpoint always persists the state matching
+            # the round that actually ran, even though the prefetch
+            # thread has drawn ahead
+            batch, mask, snap = rng.next()
+            self._host_snapshot = snap
         else:
             batch = self._sample_batches(rng)
             mask = self._sample_mask(rng)
+            self._host_snapshot = self._capture_host_state(rng)
         if isinstance(mask, dict):
             # buffered delivery plan: uplink/wire (and the vanilla
             # baseline) are attributed to the round payloads ARRIVE in,
@@ -1821,17 +2070,31 @@ class FLEngine:
                 jnp.asarray(plan["stale"], jnp.float32))
             n_del = float(plan["deliver"].sum())
             self.n_delivered += n_del
+            self.ledger.n_evicted += plan.get("n_evicted", 0.0)
             vanilla = n_del * tree_size(self.params)
+        elif self._host_bank:
+            metrics = self._run_host_round(batch, mask)
+            vanilla = float(mask.sum()) * tree_size(self.params)
         else:
             self.params, self.lbg, self.residual, metrics = self._round(
                 self.params, self.lbg, self.residual, batch,
                 jnp.asarray(mask, jnp.float32))
             vanilla = float(mask.sum()) * tree_size(self.params)
         m = {k: float(v) for k, v in metrics.items()}
+        tiers = None
+        if self.tiers is not None:
+            # per-tier wire attribution: edge links carried this round's
+            # client payloads (delivered ones, under the buffered plan);
+            # each active edge/region forwards one dense partial carry
+            active = (plan["deliver"] if isinstance(mask, dict) else mask)
+            tiers = self.tiers.round_bytes(
+                active, m["wire_bytes"],
+                carry_bytes=4.0 * tree_size(self.params))
         # vanilla wire = dense fp32, 4 bytes per param per participant —
         # the baseline both the float and byte savings are measured from
         self.ledger.record(m["uplink_floats"], vanilla,
-                           wire=m["wire_bytes"], vanilla_wire=4.0 * vanilla)
+                           wire=m["wire_bytes"], vanilla_wire=4.0 * vanilla,
+                           tiers=tiers)
         m["total_uplink"] = self.ledger.uplink_floats
         m["vanilla_uplink"] = self.ledger.vanilla_floats
         m["savings"] = self.ledger.savings
@@ -1850,21 +2113,141 @@ class FLEngine:
     def vanilla_uplink(self) -> float:
         return self.ledger.vanilla_floats
 
+    # ----------------------------------------------------- checkpointing
+    @staticmethod
+    def _rng_state(rng: np.random.RandomState) -> dict:
+        _, keys, pos, has_gauss, cached = rng.get_state()
+        return {"keys": keys.copy(), "pos": np.int64(pos),
+                "has_gauss": np.int64(has_gauss),
+                "cached": np.float64(cached)}
+
+    @staticmethod
+    def _set_rng_state(rng: np.random.RandomState, s: dict) -> None:
+        rng.set_state(("MT19937", np.asarray(s["keys"], np.uint32),
+                       int(s["pos"]), int(s["has_gauss"]),
+                       float(s["cached"])))
+
+    def _capture_host_state(self, rng: np.random.RandomState) -> dict:
+        """Post-round snapshot of every host-side stream that feeds the
+        round draws: the batch/mask rng, the dedicated fault and codec
+        streams, and the buffered delivery-plan state. Captured by
+        whichever thread samples the round (the prefetch producer, or
+        the sync ``run_round`` caller) right after its draws — that is
+        the consistency cut that makes resume bit-for-bit: a prefetcher
+        may have drawn several rounds ahead at save time, but the
+        snapshot the engine holds always matches the round that actually
+        executed, and the thrown-away queued draws are simply re-drawn
+        identically from the restored stream.
+        """
+        s = {"rng": self._rng_state(rng),
+             "fault_rng": self._rng_state(self._fault_rng),
+             "codec_rng": self._rng_state(self._codec_rng)}
+        if self._latency is not None:
+            s["arrival"] = self._arrival.copy()
+            s["dispatch_round"] = self._dispatch_round.copy()
+            s["plan_round"] = np.int64(self._plan_round)
+        return s
+
+    def save_checkpoint(self, path: str) -> None:
+        """Atomically persist the run state after the last completed
+        round: params, LBG/residual banks (host array for topk-host),
+        the buffered in-flight slots, all rng streams, the CommLedger,
+        and the round history — everything ``restore_checkpoint`` needs
+        to continue the run bit-for-bit (see ``FLConfig.ckpt_every``)."""
+        if self._host_snapshot is None:
+            raise ValueError(
+                "save_checkpoint: no completed round to snapshot — run "
+                "at least one round first")
+        state = {
+            "params": self.params,
+            "lbg": self.lbg,
+            "residual": self.residual,
+            "host": self._host_snapshot,
+            "ledger": self.ledger.state_dict(),
+            "history": self.history,
+        }
+        if self._buffer is not None:
+            state["buffer"] = self._buffer
+            state["n_delivered"] = np.float64(self.n_delivered)
+        ckpt_lib.save_checkpoint(path, state, metadata={
+            "version": 1, "round": len(self.history),
+            "config": self.cfg.to_dict()})
+
+    def restore_checkpoint(self, path: str,
+                           rng: np.random.RandomState) -> int:
+        """Load ``path`` into this engine (built from the SAME FLConfig
+        — checked against the checkpoint metadata) and restore ``rng``,
+        the caller's batch/mask RandomState that will drive subsequent
+        rounds. Device arrays are re-placed onto their current shardings
+        (topk-sharded bank placement survives); the topk-host bank is
+        restored in place so the streamer thread keeps its reference.
+        Returns the number of completed rounds (the index to resume
+        from)."""
+        tree, meta = ckpt_lib.load_checkpoint(path)
+        if meta.get("config") != self.cfg.to_dict():
+            raise ValueError(
+                "restore_checkpoint: checkpoint was written under a "
+                "different FLConfig — rebuild the engine with the "
+                f"original config. Checkpoint config: {meta.get('config')}")
+
+        def _like(cur, new):
+            return jax.device_put(np.asarray(new).astype(cur.dtype),
+                                  getattr(cur, "sharding", None))
+
+        self.params = jax.tree.map(_like, self.params, tree["params"])
+        if self._host_bank:
+            def copy(dst, src):
+                dst[...] = np.asarray(src).astype(dst.dtype)
+            jax.tree.map(copy, self.lbg, tree.get("lbg", {}))
+        elif "lbg" in tree:
+            self.lbg = jax.tree.map(_like, self.lbg, tree["lbg"])
+        if "residual" in tree:
+            self.residual = jax.tree.map(_like, self.residual,
+                                         tree["residual"])
+        if self._buffer is not None:
+            self._buffer = jax.tree.map(_like, self._buffer,
+                                        tree["buffer"])
+            self.n_delivered = float(tree["n_delivered"])
+        host = tree["host"]
+        self._set_rng_state(rng, host["rng"])
+        self._set_rng_state(self._fault_rng, host["fault_rng"])
+        self._set_rng_state(self._codec_rng, host["codec_rng"])
+        if self._latency is not None:
+            self._arrival[...] = np.asarray(host["arrival"], np.int64)
+            self._dispatch_round[...] = np.asarray(
+                host["dispatch_round"], np.int64)
+            self._plan_round = int(host["plan_round"])
+            self._pending_delays = None
+        self.ledger.load_state(tree["ledger"])
+        self.history = [{k: float(v) for k, v in h.items()}
+                        for h in tree.get("history", [])]
+        self._host_snapshot = host
+        return int(meta["round"])
+
     def run(self, rounds: int, eval_fn: Optional[Callable] = None,
             eval_every: int = 10, verbose: bool = False,
-            prefetch: bool = True):
-        rng = np.random.RandomState(self.cfg.seed + 1)
+            prefetch: bool = True, resume: bool = False):
+        cfg = self.cfg
+        rng = np.random.RandomState(cfg.seed + 1)
+        start = 0
+        if resume:
+            if not cfg.ckpt_path:
+                raise ValueError(
+                    "run(resume=True) needs FLConfig.ckpt_path")
+            start = self.restore_checkpoint(cfg.ckpt_path, rng)
         # host batch prep for round t+1 overlaps device execution of
         # round t; numerically invisible (same rng stream, same data)
         src = self.prefetcher(rng) if prefetch else rng
         try:
-            for r in range(rounds):
+            for r in range(start, rounds):
                 m = self.run_round(src)
                 if eval_fn is not None and (r + 1) % eval_every == 0:
                     m.update(eval_fn(self.params))
                 if verbose and (r + 1) % eval_every == 0:
                     print(f"round {r+1:4d} " +
                           " ".join(f"{k}={v:.4g}" for k, v in m.items()))
+                if cfg.ckpt_every and (r + 1) % cfg.ckpt_every == 0:
+                    self.save_checkpoint(cfg.ckpt_path)
         finally:
             if prefetch:
                 src.close()
@@ -1879,9 +2262,10 @@ class RoundPrefetcher:
 
     A daemon thread draws each round's ``(batch, mask)`` from the engine's
     rng IN ROUND ORDER (batches first, then the participation mask —
-    exactly the synchronous ``run_round`` order) and stages the device
-    transfers, so round t+1's host prep and H2D copies overlap the device
-    executing round t. While the prefetcher is alive it is the rng's only
+    exactly the synchronous ``run_round`` order), tags the item with the
+    post-draw host-state snapshot checkpointing relies on, and stages the
+    device transfers, so round t+1's host prep and H2D copies overlap the
+    device executing round t. While the prefetcher is alive it is the rng's only
     consumer, so every number in the round history is bit-identical to the
     synchronous path; the only observable difference is that ``close()``
     leaves the rng advanced by the rounds still sitting in the buffer.
@@ -1909,7 +2293,13 @@ class RoundPrefetcher:
                 # round against an engine that is already tearing down
                 if self._stop.is_set():
                     break
-                item = (batch, self._engine._sample_mask(self._rng))
+                mask = self._engine._sample_mask(self._rng)
+                # the post-draw host-state snapshot travels with the item
+                # (see FLEngine._capture_host_state): run_round keeps the
+                # one matching the round it executes, so a checkpoint cut
+                # under prefetch is exact
+                item = (batch, mask,
+                        self._engine._capture_host_state(self._rng))
                 while not self._stop.is_set():
                     try:
                         self._q.put(item, timeout=0.05)
@@ -1926,7 +2316,8 @@ class RoundPrefetcher:
                     continue
 
     def next(self):
-        """The next round's (batch, mask); raises if the thread died.
+        """The next round's (batch, mask, snapshot); raises if the
+        thread died.
 
         Once the producer has failed, every subsequent call re-raises
         immediately (the sentinel is posted once; without the dead flag a
@@ -1968,3 +2359,134 @@ class RoundPrefetcher:
                 "RoundPrefetcher thread did not exit within 10s of close(); "
                 "it may be wedged in a device transfer",
                 RuntimeWarning, stacklevel=2)
+
+
+# ----------------------------------------------------- host bank streamer
+
+class _HostBankStreamer:
+    """Daemon thread streaming host-resident LBG bank chunks (the
+    ``"topk-host"`` store) through a double buffer.
+
+    One FIFO task queue serializes three operations:
+
+    * ``("up", c)`` — ``jax.device_put`` chunk ``c``'s bank rows
+      (contiguous host-array slices) together with its batch rows, and
+      publish the device trees for the round loop's ``get(c)``.
+    * ``("wb", c, dev)`` — write chunk ``c``'s updated bank back into
+      the host array. The ``np.asarray`` D2H copy blocks until the
+      chunk's (asynchronously dispatched) compute finishes — that is
+      the only synchronization the pipeline needs.
+    * ``("sync", event)`` — end-of-round barrier: when it fires, every
+      prior write-back has landed and the host array is the post-round
+      bank.
+
+    FIFO ordering also guarantees a chunk's write-back precedes any
+    later round's re-upload of the same rows. The round loop keeps two
+    uploads in flight (``begin_round`` requests chunks 0 and 1;
+    iteration ``c`` requests ``c+2``), so chunk ``c+1``'s H2D transfer
+    overlaps chunk ``c``'s compute — the same double-buffer discipline
+    :class:`RoundPrefetcher` applies to whole rounds.
+    """
+
+    def __init__(self, host_bank, chunk: int):
+        self._bank = host_bank   # {name: {idx/val: np (Kp, nb, kb)}}
+        self._chunk = chunk
+        self._tasks: queue.Queue = queue.Queue()
+        self._cv = threading.Condition()
+        self._ready: dict = {}
+        self._err: Optional[BaseException] = None
+        self._batch = None
+        self._n_chunks = 0
+        self._requested: set = set()
+        self._closed = False
+        self._thread = threading.Thread(
+            target=self._work, name="fl-bank-stream", daemon=True)
+        self._thread.start()
+
+    def begin_round(self, batch, n_chunks: int):
+        """Arm the streamer with this round's host batch (chunked
+        layout) and prefetch the first two chunks."""
+        if self._err is not None:
+            raise RuntimeError(
+                "bank streamer thread failed") from self._err
+        self._batch = batch
+        self._n_chunks = n_chunks
+        self._requested = set()
+        with self._cv:
+            self._ready.clear()
+        self.request(0)
+        self.request(1)
+
+    def request(self, c: int):
+        if 0 <= c < self._n_chunks and c not in self._requested:
+            self._requested.add(c)
+            self._tasks.put(("up", c))
+
+    def get(self, c: int):
+        """Device ``(bank_chunk, batch_chunk)`` for chunk ``c`` (blocks
+        until its upload lands)."""
+        with self._cv:
+            while c not in self._ready:
+                if self._err is not None:
+                    raise RuntimeError(
+                        "bank streamer thread failed") from self._err
+                self._cv.wait(timeout=0.05)
+            return self._ready.pop(c)
+
+    def put_writeback(self, c: int, new_bank):
+        self._tasks.put(("wb", c, new_bank))
+
+    def finish_round(self):
+        evt = threading.Event()
+        self._tasks.put(("sync", evt))
+        evt.wait()
+        self._batch = None
+        if self._err is not None:
+            raise RuntimeError(
+                "bank streamer thread failed") from self._err
+
+    def close(self):
+        if self._closed:
+            return
+        self._closed = True
+        self._tasks.put(None)
+        self._thread.join(timeout=10)
+
+    def _work(self):
+        while True:
+            task = self._tasks.get()
+            if task is None:
+                return
+            kind = task[0]
+            try:
+                if self._err is not None:
+                    # after a failure only the barrier still fires (the
+                    # round loop re-raises from get/finish_round)
+                    if kind == "sync":
+                        task[1].set()
+                    continue
+                if kind == "up":
+                    c = task[1]
+                    sl = slice(c * self._chunk, (c + 1) * self._chunk)
+                    item = jax.device_put((
+                        jax.tree.map(lambda a: a[sl], self._bank),
+                        {k: v[c] for k, v in self._batch.items()}))
+                    with self._cv:
+                        self._ready[c] = item
+                        self._cv.notify_all()
+                elif kind == "wb":
+                    c, dev = task[1], task[2]
+                    sl = slice(c * self._chunk, (c + 1) * self._chunk)
+                    host = jax.tree.map(np.asarray, dev)
+
+                    def copy(dst, src):
+                        dst[sl] = src
+                    jax.tree.map(copy, self._bank, host)
+                elif kind == "sync":
+                    task[1].set()
+            except BaseException as e:  # surfaced on the consumer side
+                self._err = e
+                with self._cv:
+                    self._cv.notify_all()
+                if kind == "sync":
+                    task[1].set()

@@ -299,7 +299,8 @@ def build_experiment(spec: ExperimentSpec):
 
 
 def run_experiment(spec: ExperimentSpec,
-                   rounds: Optional[int] = None) -> ExperimentResult:
+                   rounds: Optional[int] = None,
+                   resume: bool = False) -> ExperimentResult:
     """Build the spec's experiment, run it, and return the typed result.
 
     The round loop is identical to ``FLEngine.run`` (same RNG stream, same
@@ -311,12 +312,29 @@ def run_experiment(spec: ExperimentSpec,
     invisible, same rng stream. The spec's ``fl.fused_kernels`` knob (and
     every other FLConfig field) JSON round-trips through the spec, so a
     saved spec pins the execution path too.
+
+    ``resume=True`` restores the checkpoint at ``spec.fl.ckpt_path``
+    (written per ``spec.fl.ckpt_every``) before the loop and continues
+    from the saved round; the completed history is bit-for-bit the
+    uninterrupted run's (rng streams, banks, buffered in-flight slots and
+    ledger all travel in the checkpoint). Records replayed from the
+    checkpointed engine history carry no per-round eval (eval is a pure
+    read of params, re-runnable offline); ``final_eval`` is unaffected.
     """
     rounds = spec.rounds if rounds is None else rounds
     engine, eval_fn = build_experiment(spec)
     policy = spec.eval
     records: List[RoundRecord] = []
     rng = np.random.RandomState(spec.fl.seed + 1)
+    start = 0
+    if resume:
+        if not spec.fl.ckpt_path:
+            raise ValueError("run_experiment(resume=True) needs "
+                             "fl.ckpt_path set in the spec")
+        start = engine.restore_checkpoint(spec.fl.ckpt_path, rng)
+        records = [RoundRecord(round=i + 1, eval={},
+                               **{k: h[k] for k in _HISTORY_KEYS})
+                   for i, h in enumerate(engine.history)]
     # accumulate round time only — held-out eval must not contaminate the
     # us_per_round metric the benchmarks report. Host batch prep is
     # double-buffered on the engine's prefetch thread (same rng stream,
@@ -325,7 +343,7 @@ def run_experiment(spec: ExperimentSpec,
     duration = 0.0
     src = engine.prefetcher(rng)
     try:
-        for r in range(rounds):
+        for r in range(start, rounds):
             t0 = time.time()
             m = engine.run_round(src)
             duration += time.time() - t0
@@ -339,6 +357,8 @@ def run_experiment(spec: ExperimentSpec,
                                    for k, v in shown.items()))
             records.append(RoundRecord(round=r + 1, eval=ev,
                                        **{k: m[k] for k in _HISTORY_KEYS}))
+            if spec.fl.ckpt_every and (r + 1) % spec.fl.ckpt_every == 0:
+                engine.save_checkpoint(spec.fl.ckpt_path)
     finally:
         src.close()
     final_eval = eval_fn(engine.params) if policy.final else {}

@@ -124,7 +124,32 @@ class FLConfig:
     #   replay is seed-exact and clean runs stay bit-for-bit untouched.
     latency_kw: Optional[dict] = None      # e.g. {"frac": 0.2, "delay": 4}
     #   for straggler, {"scale": 2.0} for lognormal; alpha sets the
-    #   staleness discount 1/(1+s)^alpha every model carries
+    #   staleness discount 1/(1+s)^alpha every model carries;
+    #   {"max_staleness": s} (any model) evicts-and-drops buffered
+    #   payloads older than s rounds (counted in CommLedger.n_evicted)
+    tiers: Union[None, list, dict] = None
+    # ^ hierarchical aggregation tier map (repro.fed.hierarchy). None
+    #   (default) = the flat single-server fold. Two JSON-able spellings:
+    #     [e] or [e, r]            -> e edge servers (and optionally r
+    #                                 regions) with contiguous balanced
+    #                                 client assignment in client order
+    #     {"levels": [e, r],       -> same levels, but "shuffle" derives a
+    #      "assign": "shuffle"}       seed-dependent client permutation
+    #   Clients fold into per-edge partial carries, edges into regions,
+    #   regions into the global update. The global result is bit-for-bit
+    #   the flat fold (the flat carry is kept alongside — see
+    #   fed/hierarchy.py), and CommLedger attributes per-tier wire bytes:
+    #   edge links carry the clients' sparse payloads, region/global
+    #   links carry one dense partial-carry model each — the real comms
+    #   saving at scale. Not supported with scheduler='sharded' (the
+    #   wrapped carry pytree breaks the mesh partition specs).
+    ckpt_every: int = 0              # checkpoint cadence in rounds; 0 = off.
+    #   Every N completed rounds the engine atomically snapshots params +
+    #   LBG banks + residuals + rng streams + buffered in-flight slots +
+    #   the CommLedger to ckpt_path (repro.checkpoint.ckpt), and
+    #   ``repro.fed.run --resume`` / ``FLEngine.run(resume=True)``
+    #   continues a run from it bit-for-bit mid-stream.
+    ckpt_path: Optional[str] = None  # .npz checkpoint target path
 
     # ---------------------------------------------------------- validation
     def __post_init__(self):
@@ -226,6 +251,69 @@ class FLConfig:
                 bad("scheduler='buffered' runs the replicated chunked "
                     "layout; model_sharding="
                     f"{self.model_sharding!r} needs scheduler='sharded'")
+        # topk-host keeps banks host-resident and streams them chunk-wise,
+        # which only the chunked scheduler's fixed client-block layout
+        # supports; dense residuals (error feedback) would reintroduce an
+        # O(K, M) device tensor and defeat the point, so they are rejected
+        if self.use_lbgm and self.resolved_lbg_variant == "topk-host":
+            if self.scheduler != "chunked":
+                bad("lbg_variant='topk-host' streams host-resident bank "
+                    "chunks through the chunked client-block layout — set "
+                    f"scheduler='chunked', got {self.scheduler!r}")
+            ef_on = self.error_feedback is True or (
+                self.error_feedback is None and self.compressor == "topk")
+            if ef_on:
+                bad("lbg_variant='topk-host' cannot run error feedback: "
+                    "the dense (K, M) residual bank would live on device "
+                    "and defeat out-of-core banks — set "
+                    "error_feedback=False or compressor='none'")
+            if self.fused_kernels is False:
+                bad("lbg_variant='topk-host' requires the sparse "
+                    "aggregation contract; fused_kernels=False selects "
+                    "the legacy dense fold — leave fused_kernels unset "
+                    "(auto) or True")
+        # hierarchical tiers: validate the JSON spelling here (import-
+        # light — the live TierMap is built at engine init)
+        if self.tiers is not None:
+            levels, assign = self.tiers, "contiguous"
+            if isinstance(self.tiers, dict):
+                unknown = set(self.tiers) - {"levels", "assign"}
+                if unknown:
+                    bad(f"tiers dict keys {sorted(unknown)} unknown; "
+                        "valid keys: ['assign', 'levels']")
+                levels = self.tiers.get("levels")
+                assign = self.tiers.get("assign", "contiguous")
+            if assign not in ("contiguous", "shuffle"):
+                bad("tiers assign must be 'contiguous' or 'shuffle', "
+                    f"got {assign!r}")
+            if (not isinstance(levels, (list, tuple)) or
+                    not 1 <= len(levels) <= 2 or
+                    not all(int_ge1(n) for n in levels)):
+                bad("tiers levels must be [n_edges] or "
+                    "[n_edges, n_regions] with ints >= 1, got "
+                    f"{levels!r}")
+            levels = [int(n) for n in levels]
+            if levels[0] > self.num_clients:
+                bad(f"tiers asks for {levels[0]} edges but only "
+                    f"{self.num_clients} clients exist")
+            if len(levels) == 2 and levels[1] > levels[0]:
+                bad(f"tiers levels must descend edge -> region, got "
+                    f"{levels!r}")
+            # canonicalize sequences to lists for JSON-trip equality
+            if isinstance(self.tiers, dict):
+                object.__setattr__(
+                    self, "tiers", {"levels": levels, "assign": assign})
+            else:
+                object.__setattr__(self, "tiers", levels)
+            if self.scheduler == "sharded":
+                bad("tiers are not supported with scheduler='sharded': "
+                    "the hierarchical carry pytree has no mesh partition "
+                    "spec — use vmap/chunked/buffered")
+        if self.ckpt_every < 0:
+            bad(f"ckpt_every must be >= 0, got {self.ckpt_every}")
+        if self.ckpt_every > 0 and not self.ckpt_path:
+            bad(f"ckpt_every={self.ckpt_every} needs a ckpt_path to "
+                "write to")
         # registry-keyed fields: fail now, with the registered names in the
         # message, instead of deep inside the engine build
         from repro.fed import registry as reg

@@ -1,0 +1,222 @@
+"""Hierarchical (edge -> region -> global) aggregation tiers.
+
+Real cross-device deployments do not ship every client payload to one
+server: clients upload to a nearby *edge* aggregator, edges forward a
+partial aggregate to a *region*, regions to the *global* server
+(Konecny et al.'s communication-efficiency strategies motivate exactly
+this fan-in). This module puts that topology behind the engine's
+aggregator seam without changing any round history:
+
+* :class:`TierMap` resolves ``FLConfig.tiers`` into a client->edge and
+  edge->region assignment (contiguous balanced split in client order, or
+  a seed-derived shuffle) plus the per-tier wire-byte attribution the
+  :class:`~repro.comm.accounting.CommLedger` records each round.
+* :class:`HierarchicalAggregator` wraps a *streaming* aggregator
+  (:class:`~repro.fed.engine.DenseAggregator` or
+  :class:`~repro.fed.engine.SparseTopKAggregator`). Its carry holds the
+  inner aggregator's **flat** carry untouched — ``accumulate`` replays
+  the inner fold verbatim on it, so ``finalize`` is *bit-for-bit* the
+  un-tiered fold — plus an ``(E, ...)`` **edge** carry that scatter-adds
+  each client's weighted payload into its edge's partial sum. Summing
+  the edge partials (or the region partials built from them) recovers
+  the flat carry up to fp32 reassociation — the tree fold a real
+  deployment would execute — and the unit tests pin that consistency.
+
+Why keep the flat carry at all?  fp32 addition is not associative: a
+genuine tree combine ``(edge_0 + edge_1) + ...`` rounds differently from
+the strictly sequential client fold the rest of the engine (and every
+golden history) is pinned to. Folding both carries side by side costs
+one extra O(E * M_block) buffer and makes "tiered == flat" an identity
+instead of a tolerance, which is what lets ``tiers`` compose with every
+scheduler/codec/robustness test already in the tree.
+
+Robust rules (median/trimmed-mean collect mode) cannot decompose over
+partial aggregates at all — a median of medians is not the median — so
+under a robust rule the tier map is accounting-only: the rule sees the
+same full payload stack as the flat engine (numerics identical by
+construction) and the ledger still attributes per-tier bytes.
+
+Byte attribution per round (``TierMap.round_bytes``): the edge tier
+carries exactly the round's real sparse/codec uplink bytes (clients ->
+edges is where client payloads travel); every *active* edge (>= 1
+participating client) then ships one dense fp32 partial-carry model
+upstream, and every active region ships one more — so the upstream
+tiers pay ``n_active * 4 * M`` bytes each, the "one partial carry
+instead of K payloads" saving that makes hierarchy worthwhile at scale.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+__all__ = ["TierMap", "HierarchicalAggregator", "make_tier_map"]
+
+
+class TierMap:
+    """Client -> edge (-> region) assignment resolved from
+    ``FLConfig.tiers`` (see flconfig.py for the accepted spellings)."""
+
+    def __init__(self, num_clients: int, levels, assign: str = "contiguous",
+                 seed: int = 0):
+        levels = [int(n) for n in levels]
+        if not 1 <= len(levels) <= 2:
+            raise ValueError(f"tiers levels must be [n_edges] or "
+                             f"[n_edges, n_regions], got {levels!r}")
+        self.num_clients = int(num_clients)
+        self.n_edges = levels[0]
+        self.n_regions = levels[1] if len(levels) == 2 else None
+        self.assign = assign
+        # contiguous balanced split: client k -> edge floor(k*E/K); sizes
+        # differ by at most one and stay in client order
+        edge_of = (np.arange(self.num_clients, dtype=np.int64)
+                   * self.n_edges) // self.num_clients
+        if assign == "shuffle":
+            # seed-derived permutation on its own dedicated stream (same
+            # construction as the attack/straggler cohorts, offset so the
+            # three draws are independent)
+            perm = np.random.RandomState(
+                (seed * 2654435761 + 193) % (2 ** 31)
+            ).permutation(self.num_clients)
+            edge_of = edge_of[perm]
+        elif assign != "contiguous":
+            raise ValueError(f"tiers assign must be 'contiguous' or "
+                             f"'shuffle', got {assign!r}")
+        self.edge_of = edge_of.astype(np.int32)
+        if self.n_regions is not None:
+            self.region_of = ((np.arange(self.n_edges, dtype=np.int64)
+                               * self.n_regions)
+                              // self.n_edges).astype(np.int32)
+        else:
+            self.region_of = None
+
+    # ------------------------------------------------------------ queries
+    def edge_ids_padded(self, padded_clients: int) -> np.ndarray:
+        """(Kp,) edge id per client slot; phantom pad clients route to
+        edge 0 (they only ever contribute exact zeros — the aggregators'
+        ``w > 0`` gate)."""
+        out = np.zeros(padded_clients, np.int32)
+        out[:self.num_clients] = self.edge_of
+        return out
+
+    def round_bytes(self, active_clients: np.ndarray, payload_bytes: float,
+                    carry_bytes: float) -> Dict[str, float]:
+        """Per-tier wire bytes for one round.
+
+        ``active_clients`` — (K,) bool/0-1 participation (sync: sampled
+        mask; buffered: the dispatch cohort whose payloads hit the wire).
+        ``payload_bytes`` — the round's real client uplink bytes (the
+        codec-priced ``wire_bytes`` metric). ``carry_bytes`` — one dense
+        fp32 partial-carry model, i.e. ``4 * n_params``.
+        """
+        act = np.asarray(active_clients)[:self.num_clients] > 0
+        edges = np.unique(self.edge_of[act])
+        out = {"edge": float(payload_bytes)}
+        if self.region_of is not None:
+            regions = np.unique(self.region_of[edges]) if edges.size else \
+                np.empty(0, np.int32)
+            out["region"] = float(edges.size) * float(carry_bytes)
+            out["global"] = float(regions.size) * float(carry_bytes)
+        else:
+            out["global"] = float(edges.size) * float(carry_bytes)
+        return out
+
+
+def make_tier_map(cfg) -> Optional[TierMap]:
+    """Resolve ``FLConfig.tiers`` (already shape-validated there) into a
+    live :class:`TierMap`, or None for the flat fold."""
+    if cfg.tiers is None:
+        return None
+    if isinstance(cfg.tiers, dict):
+        return TierMap(cfg.num_clients, cfg.tiers["levels"],
+                       assign=cfg.tiers.get("assign", "contiguous"),
+                       seed=cfg.seed)
+    return TierMap(cfg.num_clients, cfg.tiers, seed=cfg.seed)
+
+
+class HierarchicalAggregator:
+    """Streaming-aggregator wrapper that folds per-edge partial carries
+    alongside the inner aggregator's untouched flat carry.
+
+    The carry is ``{"flat": inner carry, "edge": (E, ...) per-leaf
+    partials, "pos": int32 fold cursor}``. Every scheduler that reaches
+    this wrapper folds client payloads strictly in client-slot order
+    (vmap: one call over all K; chunked/buffered/topk-host: sequential
+    chunks from slot 0), so ``pos`` addresses the static ``edge_ids``
+    table to route each chunk's clients to their edges.
+    """
+
+    def __init__(self, inner, edge_ids: np.ndarray, n_edges: int):
+        import jax.numpy as jnp
+        self.inner = inner
+        self.n_edges = int(n_edges)
+        self._edge_ids = jnp.asarray(edge_ids, jnp.int32)
+        self.payload_keys = getattr(inner, "payload_keys", None)
+
+    # layout of one edge-partial leaf mirrors the inner carry's leaf
+    def init(self, params):
+        import jax
+        import jax.numpy as jnp
+        flat = self.inner.init(params)
+        edge = jax.tree.map(
+            lambda a: jnp.zeros((self.n_edges,) + a.shape, a.dtype), flat)
+        return {"flat": flat, "edge": edge,
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def accumulate(self, acc, w, out):
+        import jax
+        import jax.numpy as jnp
+        n = w.shape[0]
+        ids = jax.lax.dynamic_slice_in_dim(self._edge_ids, acc["pos"], n)
+        # the inner fold runs verbatim on the flat carry -> finalize is
+        # bit-for-bit the un-tiered aggregation
+        flat = self.inner.accumulate(acc["flat"], w, out)
+        if isinstance(out, tuple):
+            send, gscale = out
+
+            def body(e_acc, x):
+                w_k, send_k, s_k, id_k = x
+                coeff = w_k * s_k
+
+                def upd(ai, sk):
+                    # same gather-modify-scatter expression as
+                    # SparseTopKAggregator.accumulate, applied to the
+                    # client's edge row
+                    row = ai[id_k]
+                    rows = jnp.arange(row.shape[0])[:, None]
+                    cur = row[rows, sk["idx"]]
+                    new = cur + jnp.where(w_k > 0, coeff * sk["val"], 0.0)
+                    return ai.at[id_k].set(
+                        row.at[rows, sk["idx"]].set(new))
+
+                return {name: upd(e_acc[name], send_k[name])
+                        for name in e_acc}, None
+
+            edge, _ = jax.lax.scan(body, acc["edge"],
+                                   (w, send, gscale, ids))
+        else:
+            def body(e_acc, x):
+                w_k, gt_k, id_k = x
+                return jax.tree.map(
+                    lambda ai, gi: ai.at[id_k].add(jnp.where(
+                        w_k > 0, w_k * gi.astype(jnp.float32), 0.0)),
+                    e_acc, gt_k), None
+
+            edge, _ = jax.lax.scan(body, acc["edge"], (w, out, ids))
+        return {"flat": flat, "edge": edge, "pos": acc["pos"] + n}
+
+    def finalize(self, acc):
+        return self.inner.finalize(acc["flat"])
+
+    # --------------------------------------------------- tier inspection
+    def edge_partials(self, acc):
+        """Per-leaf (E, ...) edge partial carries."""
+        return acc["edge"]
+
+    def combine_edges(self, acc):
+        """Tree-combined edge partials — equals the flat carry up to fp32
+        reassociation (the fold a physical edge->global deployment
+        executes)."""
+        import jax
+        import jax.numpy as jnp
+        return jax.tree.map(lambda a: jnp.sum(a, axis=0), acc["edge"])

@@ -43,12 +43,27 @@ NEVER = 1 << 30
 
 
 class LatencyModel:
-    """Base: zero delay, polynomial staleness discount, homogeneous tau."""
+    """Base: zero delay, polynomial staleness discount, homogeneous tau.
 
-    def __init__(self, alpha: float = 0.5):
+    ``max_staleness`` (all models) bounds how long a dispatched payload
+    may sit in a client's one-slot buffer: at the start of each round any
+    in-flight payload older than ``max_staleness`` rounds is evicted and
+    dropped (counted in ``CommLedger.n_evicted``) and the slot is free to
+    re-dispatch that same round. ``None`` (default) parks payloads
+    indefinitely — the pre-eviction behaviour, under which a straggler
+    ``drop=True`` payload (delay = :data:`NEVER`) pins its slot forever.
+    """
+
+    def __init__(self, alpha: float = 0.5,
+                 max_staleness: Optional[int] = None):
         if alpha < 0:
             raise ValueError(f"latency alpha must be >= 0, got {alpha}")
+        if max_staleness is not None and int(max_staleness) < 0:
+            raise ValueError(f"latency max_staleness must be >= 0 or "
+                             f"None, got {max_staleness}")
         self.alpha = float(alpha)
+        self.max_staleness = (None if max_staleness is None
+                              else int(max_staleness))
 
     def setup(self, num_clients: int, seed: int) -> None:
         """One-time hook (e.g. draw a fixed straggler cohort)."""
@@ -83,8 +98,9 @@ class FixedLatency(LatencyModel):
     """Every client delivers exactly ``delay`` rounds after dispatch —
     the simplest model, and the one the wire-attribution tests pin."""
 
-    def __init__(self, delay: int = 1, alpha: float = 0.5):
-        super().__init__(alpha)
+    def __init__(self, delay: int = 1, alpha: float = 0.5,
+                 max_staleness: Optional[int] = None):
+        super().__init__(alpha, max_staleness)
         if delay < 0:
             raise ValueError(f"fixed latency delay must be >= 0, "
                              f"got {delay}")
@@ -98,8 +114,9 @@ class FixedLatency(LatencyModel):
 class UniformLatency(LatencyModel):
     """Delay ~ UniformInt[low, high] per client per round."""
 
-    def __init__(self, low: int = 0, high: int = 3, alpha: float = 0.5):
-        super().__init__(alpha)
+    def __init__(self, low: int = 0, high: int = 3, alpha: float = 0.5,
+                 max_staleness: Optional[int] = None):
+        super().__init__(alpha, max_staleness)
         if not 0 <= low <= high:
             raise ValueError(f"uniform latency needs 0 <= low <= high, "
                              f"got low={low} high={high}")
@@ -117,8 +134,9 @@ class LognormalLatency(LatencyModel):
     deployments report (a few very slow devices dominate the tail)."""
 
     def __init__(self, scale: float = 1.0, sigma: float = 0.75,
-                 max_delay: int = 16, alpha: float = 0.5):
-        super().__init__(alpha)
+                 max_delay: int = 16, alpha: float = 0.5,
+                 max_staleness: Optional[int] = None):
+        super().__init__(alpha, max_staleness)
         if scale < 0 or sigma < 0 or max_delay < 0:
             raise ValueError(
                 f"lognormal latency needs scale, sigma, max_delay >= 0, "
@@ -149,8 +167,9 @@ class StragglerLatency(LatencyModel):
 
     def __init__(self, frac: float = 0.2, delay: int = 4, jitter: int = 0,
                  slow_tau: Optional[int] = None, drop: bool = False,
-                 cohort: str = "random", alpha: float = 0.5):
-        super().__init__(alpha)
+                 cohort: str = "random", alpha: float = 0.5,
+                 max_staleness: Optional[int] = None):
+        super().__init__(alpha, max_staleness)
         if not 0.0 <= frac <= 1.0:
             raise ValueError(f"straggler frac must be in [0, 1], "
                              f"got {frac}")

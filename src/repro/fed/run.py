@@ -57,6 +57,31 @@ budget). Needs the sparse payload path (``fl.lbg_variant=topk`` /
 ``topk-sharded``); wire/uplink bytes are attributed to the arrival
 round. ``examples/specs/async_buffered.json`` is a full spec;
 ``benchmarks/async_heterogeneity.py`` is the dropout-vs-buffered grid.
+``"fl.latency_kw={\"max_staleness\": 8}"`` (any model) evicts in-flight
+payloads older than 8 rounds instead of parking them forever; evictions
+land in the ledger as ``n_evicted``.
+
+Out-of-core client banks: ``--set fl.lbg_variant=topk-host`` keeps the
+per-client LBG banks host-resident (NumPy) and streams one chunk's bank
+to the device per scan step on a background thread — device bank memory
+is O(chunk_size), independent of ``num_clients``, bit-for-bit equal to
+``topk``. Needs ``fl.scheduler=chunked``, a streaming aggregator
+(``mean``), and no error feedback. ``examples/specs/hier_100k.json``
+runs a 100k-client round this way.
+
+Hierarchical aggregation: ``--set "fl.tiers=[32,4]"`` routes clients
+through 32 edge aggregators and 4 regions before the global server
+(contiguous balanced assignment; ``--set "fl.tiers={\"levels\": [32,4],
+\"assign\": \"shuffle\"}"`` for a seed-derived shuffle). Histories stay
+bit-for-bit the flat fold (see ``repro.fed.hierarchy``); the ledger
+gains per-tier wire bytes (``tier_wire_bytes``).
+
+Checkpoint/resume: ``--set fl.ckpt_every=10 --set
+fl.ckpt_path=run.ckpt.npz`` atomically checkpoints params, LBG banks,
+rng streams, buffered in-flight slots and the comm ledger every 10
+rounds; re-running with ``--resume`` picks up from the latest
+checkpoint and finishes with a history bit-for-bit equal to the
+uninterrupted run.
 """
 from __future__ import annotations
 
@@ -114,6 +139,11 @@ def main(argv: Optional[list] = None) -> int:
                     help="write the full result (records + spec) as JSON")
     ap.add_argument("--print-spec", action="store_true",
                     help="print the resolved spec as JSON and exit")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the checkpoint at fl.ckpt_path "
+                         "(requires fl.ckpt_every/fl.ckpt_path in the "
+                         "spec); the completed history is bit-for-bit "
+                         "the uninterrupted run's")
     args = ap.parse_args(argv)
 
     spec = (ExperimentSpec.load(args.spec) if args.spec else default_spec())
@@ -126,7 +156,7 @@ def main(argv: Optional[list] = None) -> int:
         print(spec.to_json())
         return 0
 
-    result = run_experiment(spec)
+    result = run_experiment(spec, resume=args.resume)
     last = result.records[-1]
     print(f"[{spec.name}] {result.rounds} rounds in "
           f"{result.duration_s:.2f}s "

@@ -1,0 +1,264 @@
+"""Hierarchical (edge -> region -> global) aggregation tiers.
+
+Acceptance (ISSUE 10 tentpole):
+  * ``FLConfig.tiers`` leaves every round history *bit-for-bit* the flat
+    fold (the wrapper replays the inner aggregator's fold verbatim on an
+    untouched flat carry) on the vmap, chunked and buffered schedulers,
+    for both the mean path and — accounting-only — robust rules/codec;
+  * the combined edge partials match the flat carry at fp32 tolerance
+    (the tree fold a physical deployment executes);
+  * the :class:`~repro.comm.accounting.CommLedger` attributes per-tier
+    wire bytes: the edge tier carries the real client payload bytes, the
+    upstream tiers one dense fp32 partial carry per active aggregator.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.tree_math import tree_size
+from repro.data.synthetic import mixture_classification
+from repro.fed import FLConfig, FLEngine, partition_label_skew
+from repro.fed.engine import DenseAggregator, SparseTopKAggregator
+from repro.fed.hierarchy import HierarchicalAggregator, TierMap, make_tier_map
+from repro.models.smallnets import apply_fcn, classifier_loss, init_fcn
+
+
+@pytest.fixture(scope="module")
+def fcn_setup():
+    cfg = get_config("paper-fcn")
+    params, _ = init_fcn(jax.random.PRNGKey(0), cfg)
+    x, y = mixture_classification(1200, 10, seed=0)
+    loss_fn = lambda p, b: classifier_loss(apply_fcn, p, cfg, b["x"], b["y"])
+    return params, x, y, loss_fn
+
+
+def make_engine(fcn_setup, K=8, **flkw):
+    params, x, y, loss_fn = fcn_setup
+    flkw.setdefault("use_lbgm", True)
+    flkw.setdefault("lbg_variant", "topk")
+    flkw.setdefault("lbg_kw", {"k_frac": 0.1})
+    flkw.setdefault("delta_threshold", 0.5)
+    parts = partition_label_skew(y, K, 3, seed=0)
+    data = [{"x": x[p], "y": y[p]} for p in parts]
+    return FLEngine(loss_fn, params, data,
+                    FLConfig(num_clients=K, tau=2, lr=0.05, batch_size=16,
+                             chunk_size=4, **flkw))
+
+
+def run_rounds(fl, n=3, seed=0):
+    rng = np.random.RandomState(seed)
+    for _ in range(n):
+        fl.run_round(rng)
+    return fl
+
+
+def assert_same_run(fl_a, fl_b):
+    assert len(fl_a.history) == len(fl_b.history)
+    for ra, rb in zip(fl_a.history, fl_b.history):
+        assert ra.keys() == rb.keys()
+        for k in ra:
+            assert ra[k] == rb[k], (k, ra[k], rb[k])
+    for k in fl_a.params:
+        np.testing.assert_array_equal(np.asarray(fl_a.params[k]),
+                                      np.asarray(fl_b.params[k]), err_msg=k)
+
+
+# ------------------------------------------------------------------ TierMap
+
+def test_tier_map_contiguous_balanced():
+    tm = TierMap(10, [4])
+    # floor(k*E/K): balanced within one, in client order
+    np.testing.assert_array_equal(tm.edge_of,
+                                  [0, 0, 0, 1, 1, 2, 2, 2, 3, 3])
+    assert tm.region_of is None
+    tm2 = TierMap(8, [4, 2])
+    np.testing.assert_array_equal(tm2.edge_of, [0, 0, 1, 1, 2, 2, 3, 3])
+    np.testing.assert_array_equal(tm2.region_of, [0, 0, 1, 1])
+
+
+def test_tier_map_shuffle_is_seeded_permutation():
+    a = TierMap(32, [8], assign="shuffle", seed=3)
+    b = TierMap(32, [8], assign="shuffle", seed=3)
+    c = TierMap(32, [8], assign="shuffle", seed=4)
+    np.testing.assert_array_equal(a.edge_of, b.edge_of)
+    assert not np.array_equal(a.edge_of, c.edge_of)
+    # a permutation of the contiguous split: same edge sizes
+    flat = TierMap(32, [8]).edge_of
+    np.testing.assert_array_equal(np.bincount(a.edge_of, minlength=8),
+                                  np.bincount(flat, minlength=8))
+
+
+def test_tier_map_padding_and_validation():
+    tm = TierMap(5, [2])
+    ids = tm.edge_ids_padded(8)
+    np.testing.assert_array_equal(ids[:5], tm.edge_of)
+    np.testing.assert_array_equal(ids[5:], 0)
+    with pytest.raises(ValueError):
+        TierMap(8, [2, 2, 2])
+    with pytest.raises(ValueError):
+        TierMap(8, [4], assign="roundrobin")
+
+
+def test_tier_map_round_bytes():
+    tm = TierMap(8, [4, 2])
+    # all clients active: 4 edges and both regions ship one carry each
+    b = tm.round_bytes(np.ones(8), payload_bytes=100.0, carry_bytes=40.0)
+    assert b == {"edge": 100.0, "region": 160.0, "global": 80.0}
+    # only clients 0-1 active -> edge 0 -> region 0
+    act = np.zeros(8)
+    act[:2] = 1
+    b = tm.round_bytes(act, 10.0, 40.0)
+    assert b == {"edge": 10.0, "region": 40.0, "global": 40.0}
+    # nobody active: upstream links idle
+    b = tm.round_bytes(np.zeros(8), 0.0, 40.0)
+    assert b == {"edge": 0.0, "region": 0.0, "global": 0.0}
+    # one-level spelling: edges ship straight to global
+    tm1 = TierMap(8, [4])
+    b = tm1.round_bytes(np.ones(8), 100.0, 40.0)
+    assert b == {"edge": 100.0, "global": 160.0}
+
+
+def test_make_tier_map_spellings(fcn_setup):
+    cfg = FLConfig(num_clients=8, tiers=[4, 2])
+    tm = make_tier_map(cfg)
+    assert (tm.n_edges, tm.n_regions, tm.assign) == (4, 2, "contiguous")
+    cfg = FLConfig(num_clients=8,
+                   tiers={"levels": [4], "assign": "shuffle"})
+    tm = make_tier_map(cfg)
+    assert (tm.n_edges, tm.n_regions, tm.assign) == (4, None, "shuffle")
+    assert make_tier_map(FLConfig(num_clients=8)) is None
+
+
+def test_flconfig_tiers_validation():
+    with pytest.raises(ValueError, match="tiers"):
+        FLConfig(num_clients=8, tiers=[16])          # more edges than K
+    with pytest.raises(ValueError, match="tiers"):
+        FLConfig(num_clients=8, tiers=[2, 4])        # not descending
+    with pytest.raises(ValueError, match="tiers"):
+        FLConfig(num_clients=8, tiers={"levels": [4], "assign": "zigzag"})
+    with pytest.raises(ValueError, match="tiers"):
+        FLConfig(num_clients=8, tiers={"levels": [4], "typo": 1})
+    with pytest.raises(ValueError, match="sharded"):
+        FLConfig(num_clients=8, tiers=[4], scheduler="sharded",
+                 use_lbgm=True, lbg_variant="topk-sharded")
+
+
+# ------------------------------------------- aggregator-level equivalence
+
+def _fold(agg, acc, w, payload, chunk):
+    n = w.shape[0]
+    for s in range(0, n, chunk):
+        sl = slice(s, s + chunk)
+        out = (jax.tree.map(lambda a: a[sl], payload[0]), payload[1][sl]) \
+            if isinstance(payload, tuple) \
+            else jax.tree.map(lambda a: a[sl], payload)
+        acc = agg.accumulate(acc, w[sl], out)
+    return acc
+
+
+@pytest.mark.parametrize("sparse", [False, True])
+def test_wrapper_flat_carry_is_bit_for_bit(sparse):
+    rng = np.random.RandomState(0)
+    K, E = 12, 3
+    params = {"w": jnp.zeros(64, jnp.float32)}
+    w = jnp.asarray(rng.rand(K).astype(np.float32))
+    if sparse:
+        inner = SparseTopKAggregator(params, k_frac=0.1)
+        (_, _, nb, block) = inner._layout["w"]
+        kb = max(1, int(np.ceil(0.1 * block)))
+        # unique in-row indices (top-k payloads never repeat a position)
+        idx = np.stack([np.stack([
+            rng.choice(block, size=kb, replace=False)
+            for _ in range(nb)]) for _ in range(K)])
+        send = {"w": {"idx": jnp.asarray(idx, jnp.int32),
+                      "val": jnp.asarray(
+                          rng.randn(K, nb, kb).astype(np.float32))}}
+        payload = (send, jnp.ones(K, jnp.float32))
+    else:
+        inner = DenseAggregator()
+        payload = {"w": jnp.asarray(rng.randn(K, 64).astype(np.float32))}
+    tm = TierMap(K, [E])
+    hier = HierarchicalAggregator(inner, tm.edge_ids_padded(K), E)
+    a_flat = _fold(inner, inner.init(params), w, payload, chunk=4)
+    a_hier = _fold(hier, hier.init(params), w, payload, chunk=4)
+    jax.tree.map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                   np.asarray(y)),
+        inner.finalize(a_flat), hier.finalize(a_hier))
+    # the physical tree combine of edge partials: fp32 tolerance
+    jax.tree.map(
+        lambda x, y: np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=1e-5, atol=1e-6),
+        a_flat, hier.combine_edges(a_hier))
+    # each edge partial only holds its own clients' mass
+    edges = hier.edge_partials(a_hier)
+    for e in range(E):
+        own = np.asarray(tm.edge_of) == e
+        w_e = jnp.where(jnp.asarray(own), w, 0.0)
+        ref = _fold(inner, inner.init(params), w_e, payload, chunk=4)
+        jax.tree.map(
+            lambda x, y, e=e: np.testing.assert_allclose(
+                np.asarray(x), np.asarray(y)[e], rtol=1e-5, atol=1e-6),
+            ref, edges)
+
+
+# ------------------------------------------------- engine-level invariance
+
+@pytest.mark.parametrize("sched,extra", [
+    ("chunked", {}),
+    ("vmap", {}),
+    ("chunked", {"sample_frac": 0.5}),
+    ("chunked", {"tiers": {"levels": [4, 2], "assign": "shuffle"}}),
+    ("buffered", {"latency": "fixed", "latency_kw": {"delay": 1}}),
+])
+def test_tiered_history_bit_for_bit_flat(fcn_setup, sched, extra):
+    extra = dict(extra)
+    tiers = extra.pop("tiers", [4, 2])
+    flat = run_rounds(make_engine(fcn_setup, scheduler=sched, **extra))
+    tier = run_rounds(make_engine(fcn_setup, scheduler=sched, tiers=tiers,
+                                  **extra))
+    assert tier._tiered_fold
+    assert_same_run(flat, tier)
+
+
+def test_tiered_accounting_only_paths(fcn_setup):
+    # robust rules and lossy codecs keep the flat fold (a median of
+    # medians is not the median; codec payloads are lossy) — the tier map
+    # is accounting-only there, so histories stay exactly equal
+    for extra in ({"aggregator": "median"}, {"codec": "int8"}):
+        flat = run_rounds(make_engine(fcn_setup, scheduler="chunked",
+                                      **extra))
+        tier = run_rounds(make_engine(fcn_setup, scheduler="chunked",
+                                      tiers=[4], **extra))
+        assert not tier._tiered_fold
+        assert tier.ledger.tier_wire_bytes  # bytes still attributed
+        assert_same_run(flat, tier)
+
+
+def test_ledger_tier_byte_attribution(fcn_setup):
+    fl = run_rounds(make_engine(fcn_setup, K=8, scheduler="chunked",
+                                tiers=[4, 2]), n=3)
+    tb = fl.ledger.tier_wire_bytes
+    assert set(tb) == {"edge", "region", "global"}
+    # edge tier carries exactly the rounds' real payload bytes
+    assert tb["edge"] == sum(h["wire_bytes"] for h in fl.history)
+    # full participation: every edge and region ships one dense fp32
+    # carry per round
+    carry = 4.0 * tree_size(fl.params)
+    assert tb["region"] == 3 * 4 * carry
+    assert tb["global"] == 3 * 2 * carry
+    # per-round ledger entries carry the same split
+    for e in fl.ledger.per_round:
+        assert set(e["tiers"]) == {"edge", "region", "global"}
+    assert fl.ledger.summary()["tier_wire_bytes"] == tb
+
+
+def test_ledger_tiers_roundtrip_state_dict(fcn_setup):
+    fl = run_rounds(make_engine(fcn_setup, scheduler="chunked", tiers=[4]))
+    from repro.comm.accounting import CommLedger
+    fresh = CommLedger()
+    fresh.load_state(fl.ledger.state_dict())
+    assert fresh.state_dict() == fl.ledger.state_dict()
+    assert fresh.tier_wire_bytes == fl.ledger.tier_wire_bytes

@@ -1,0 +1,209 @@
+"""Out-of-core ``"topk-host"`` LBG store: host-resident client banks
+streamed chunk-wise to the device.
+
+Acceptance (ISSUE 10 tentpole):
+  * ``lbg_variant="topk-host"`` reproduces ``"topk"`` round histories,
+    final params AND final banks *bit-for-bit* on the chunked scheduler
+    (the chunk computation is op-for-op the chunked scan body), composing
+    with device sampling, codecs and hierarchical tiers;
+  * per-round device bank bytes are O(chunk_size) — independent of
+    ``num_clients`` (compiled-envelope + exact chunk-bytes assertions,
+    and a slow-marked K=100,000 toy round);
+  * incompatible configs fail at construction with actionable errors.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.synthetic import mixture_classification
+from repro.fed import FLConfig, FLEngine, partition_label_skew
+from repro.models.smallnets import apply_fcn, classifier_loss, init_fcn
+
+
+@pytest.fixture(scope="module")
+def fcn_setup():
+    cfg = get_config("paper-fcn")
+    params, _ = init_fcn(jax.random.PRNGKey(0), cfg)
+    x, y = mixture_classification(1200, 10, seed=0)
+    loss_fn = lambda p, b: classifier_loss(apply_fcn, p, cfg, b["x"], b["y"])
+    return params, x, y, loss_fn
+
+
+def make_engine(fcn_setup, K=8, **flkw):
+    params, x, y, loss_fn = fcn_setup
+    flkw.setdefault("use_lbgm", True)
+    flkw.setdefault("lbg_variant", "topk")
+    flkw.setdefault("lbg_kw", {"k_frac": 0.1})
+    flkw.setdefault("delta_threshold", 0.5)
+    flkw.setdefault("scheduler", "chunked")
+    parts = partition_label_skew(y, K, 3, seed=0)
+    data = [{"x": x[p], "y": y[p]} for p in parts]
+    return FLEngine(loss_fn, params, data,
+                    FLConfig(num_clients=K, tau=2, lr=0.05, batch_size=16,
+                             chunk_size=4, **flkw))
+
+
+def run_rounds(fl, n=3, seed=0):
+    rng = np.random.RandomState(seed)
+    for _ in range(n):
+        fl.run_round(rng)
+    return fl
+
+
+def assert_same_run(fl_a, fl_b, banks=True):
+    assert len(fl_a.history) == len(fl_b.history)
+    for ra, rb in zip(fl_a.history, fl_b.history):
+        assert ra.keys() == rb.keys()
+        for k in ra:
+            assert ra[k] == rb[k], (k, ra[k], rb[k])
+    for k in fl_a.params:
+        np.testing.assert_array_equal(np.asarray(fl_a.params[k]),
+                                      np.asarray(fl_b.params[k]), err_msg=k)
+    if banks:
+        jax.tree.map(
+            lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                       np.asarray(b)),
+            fl_a.lbg, fl_b.lbg)
+
+
+# --------------------------------------------------------- bit-for-bit
+
+@pytest.mark.parametrize("extra", [
+    {},
+    {"sample_frac": 0.5},
+    {"tiers": [4, 2]},
+    {"codec": "int8"},
+], ids=["plain", "sampled", "tiered", "codec"])
+def test_host_store_bit_for_bit_vs_topk(fcn_setup, extra):
+    dev = run_rounds(make_engine(fcn_setup, **extra))
+    host = run_rounds(make_engine(fcn_setup, lbg_variant="topk-host",
+                                  **extra))
+    assert host._host_bank
+    # banks live on the host as numpy, not on device
+    assert all(isinstance(v, np.ndarray)
+               for v in jax.tree.leaves(host.lbg))
+    assert_same_run(dev, host)
+
+
+def test_host_store_engine_run_prefetch(fcn_setup):
+    # the engine-owned prefetcher path (batch+mask sampled on the
+    # producer thread) composes with the bank streamer thread
+    dev = make_engine(fcn_setup)
+    host = make_engine(fcn_setup, lbg_variant="topk-host")
+    ha = dev.run(3)
+    hb = host.run(3)
+    assert ha == hb
+    assert_same_run(dev, host)
+
+
+# ------------------------------------------------------- config surface
+
+def test_host_store_config_rejections(fcn_setup):
+    with pytest.raises(ValueError, match="topk-host"):
+        FLConfig(num_clients=8, use_lbgm=True, lbg_variant="topk-host",
+                 scheduler="vmap")
+    with pytest.raises(ValueError, match="topk-host"):
+        FLConfig(num_clients=8, use_lbgm=True, lbg_variant="topk-host",
+                 scheduler="chunked", error_feedback=True)
+    with pytest.raises(ValueError, match="topk-host"):
+        FLConfig(num_clients=8, use_lbgm=True, lbg_variant="topk-host",
+                 scheduler="chunked", compressor="topk")  # EF default on
+    with pytest.raises(ValueError, match="topk-host"):
+        FLConfig(num_clients=8, use_lbgm=True, lbg_variant="topk-host",
+                 scheduler="chunked", fused_kernels=False)
+    with pytest.raises(ValueError):
+        FLConfig(num_clients=8, use_lbgm=True, lbg_variant="topk-host",
+                 scheduler="buffered")
+    # collect-mode aggregators need the full payload stack on device —
+    # rejected at engine build, pointing at the streaming mean
+    with pytest.raises(ValueError, match="mean"):
+        make_engine(fcn_setup, lbg_variant="topk-host",
+                    aggregator="median")
+
+
+# ------------------------------------------------- device-memory envelope
+
+def _chunk_args(fl):
+    """ShapeDtypeStructs of one host-chunk call, from live engine state."""
+    sds = lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)
+    params = jax.tree.map(sds, fl.params)
+    acc = jax.eval_shape(fl.agg.init, params)
+    lbg_c = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct((fl._chunk,) + a.shape[1:],
+                                       a.dtype), fl.lbg)
+    batch = fl._sample_batches(np.random.RandomState(99))
+    b_c = {k: jax.ShapeDtypeStruct(v.shape[1:], v.dtype)
+           for k, v in batch.items()}
+    w_c = jax.ShapeDtypeStruct((fl._chunk,), jnp.float32)
+    return params, acc, lbg_c, {}, b_c, w_c, w_c
+
+
+def test_device_bank_bytes_independent_of_K(fcn_setup):
+    small = make_engine(fcn_setup, K=8, lbg_variant="topk-host")
+    big = make_engine(fcn_setup, K=32, lbg_variant="topk-host")
+    assert small.host_chunk_device_bytes() == big.host_chunk_device_bytes()
+    # the compiled chunk computation itself is K-free: identical input
+    # shapes, and (when the backend reports it) identical memory envelope
+    args_s, args_b = _chunk_args(small), _chunk_args(big)
+    shapes = lambda args: [(a.shape, str(a.dtype))
+                           for a in jax.tree.leaves(args)]
+    assert shapes(args_s) == shapes(args_b)
+    ma_s = small._chunk_fn.lower(*args_s).compile().memory_analysis()
+    ma_b = big._chunk_fn.lower(*args_b).compile().memory_analysis()
+    if ma_s is not None and ma_b is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes"):
+            assert getattr(ma_s, attr) == getattr(ma_b, attr), attr
+
+
+# ------------------------------------------------------ 100k-client round
+
+def _tiny_fl(K, chunk=512):
+    d = 8
+    rng = np.random.RandomState(0)
+    params = {"w": jnp.asarray(rng.randn(d).astype(np.float32) * 0.1)}
+
+    def loss_fn(p, b):
+        err = b["x"] @ p["w"] - b["y"]
+        return jnp.mean(err * err), {}
+
+    x = rng.randn(K * 4, d).astype(np.float32)
+    y = (x @ np.arange(d, dtype=np.float32) / d).astype(np.float32)
+    data = [{"x": x[4 * k: 4 * k + 4], "y": y[4 * k: 4 * k + 4]}
+            for k in range(K)]
+    return FLEngine(loss_fn, params, data,
+                    FLConfig(num_clients=K, tau=1, lr=0.1, batch_size=4,
+                             chunk_size=chunk, scheduler="chunked",
+                             use_lbgm=True, lbg_variant="topk-host",
+                             lbg_kw={"k_frac": 0.25},
+                             delta_threshold=0.5))
+
+
+@pytest.mark.slow
+def test_100k_client_round_fixed_device_memory():
+    # 102400 = 200 * 512: keeps the resolved chunk identical to the
+    # K=1024 reference (pick_chunk prefers exact divisors — 100000 would
+    # resolve to chunk 500 and shift every shape by 12 rows)
+    small = _tiny_fl(1024)
+    big = _tiny_fl(102_400)
+    assert small._chunk == big._chunk == 512
+    # the acceptance claim: per-round device bank bytes do not grow with
+    # the cohort — same streamed-chunk footprint at K=1k and K=100k
+    assert small.host_chunk_device_bytes() == big.host_chunk_device_bytes()
+    args_s, args_b = _chunk_args(small), _chunk_args(big)
+    assert [(a.shape, str(a.dtype)) for a in jax.tree.leaves(args_s)] == \
+           [(a.shape, str(a.dtype)) for a in jax.tree.leaves(args_b)]
+    ma_s = small._chunk_fn.lower(*args_s).compile().memory_analysis()
+    ma_b = big._chunk_fn.lower(*args_b).compile().memory_analysis()
+    if ma_s is not None and ma_b is not None:
+        assert ma_s.temp_size_in_bytes == ma_b.temp_size_in_bytes
+    rng = np.random.RandomState(0)
+    m = big.run_round(rng)
+    assert np.isfinite(m["loss"])
+    assert big.ledger.rounds == 1
+    # bank bytes on device per chunk: K never enters the product
+    assert big.host_chunk_device_bytes() == \
+        sum(v.nbytes // v.shape[0]
+            for v in jax.tree.leaves(big.lbg)) * big._chunk
